@@ -1,0 +1,96 @@
+"""Fig. 12/13: scaling laws.
+
+Real (tiny) training runs: dense vs fine-grained-MoE models across a range
+of compute budgets on the synthetic corpus; fit the FLOPs->loss law per
+family and report the MoE efficiency lever (paper: ~3x, growing with C).
+Also fits B(C), lr(C) power laws from the per-budget grid winners.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import api
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.core import scaling_laws as SL
+from repro.data.pipeline import DataPipeline, PipelineConfig
+from repro.launch.mesh import make_local_mesh
+from repro.optim import adamw
+
+VOCAB = 512
+SEQ = 64
+
+
+def _dense(d):
+    return ModelConfig(arch_id=f"dense{d}", family="dense", source="bench",
+                       n_layers=2, d_model=d, n_heads=4, n_kv_heads=4,
+                       d_ff=d * 2, vocab_size=VOCAB, mlp_act="swiglu")
+
+
+def _moe(d):
+    return ModelConfig(arch_id=f"moe{d}", family="moe", source="bench",
+                       n_layers=2, d_model=d, n_heads=4, n_kv_heads=4,
+                       d_ff=d * 2, vocab_size=VOCAB, mlp_act="swiglu",
+                       moe=MoEConfig(n_experts=16, top_k=2, expert_d_ff=d,
+                                     n_shared_experts=1,
+                                     router_warmup_steps=4))
+
+
+def _train(cfg, steps, batch, lr, seed=0):
+    mesh = make_local_mesh(1, 1)
+    runner = api.Runner(cfg, mesh, max_seq=SEQ)
+    step = jax.jit(runner.make_train_step(batch))
+    pipe = DataPipeline(PipelineConfig(vocab_size=VOCAB, seq_len=SEQ,
+                                       batch_size=batch, seed=seed))
+    params = runner.init_params(seed)
+    opt = adamw.init_opt_state(params)
+    last = []
+    for i in range(steps):
+        jb = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+        params, opt, m = step(params, opt, jb, jnp.int32(i),
+                              jax.random.PRNGKey(i), jnp.float32(lr))
+        last.append(float(m["loss/ce"]))
+    return float(np.mean(last[-5:]))
+
+
+def run(fast=False):
+    # compute budget C ~ 6 * N_active * tokens; swept via training steps
+    # on a fixed-width model per family (IsoModel slices of the IsoFLOP
+    # grid — enough to fit the FLOPs->loss curves on CPU)
+    step_grid = [10, 25, 60] if fast else [15, 40, 100, 220]
+    rows, detail = [], {"dense": [], "moe": []}
+    for fam, mk in (("dense", _dense), ("moe", _moe)):
+        cfg = mk(64)
+        n_act = cfg.active_param_count()
+        for steps in step_grid:
+            c = 6.0 * n_act * steps * 8 * SEQ
+            loss = _train(cfg, steps, 8, 2e-3)
+            detail[fam].append({"steps": steps, "compute": c, "loss": loss})
+            rows.append((f"scaling_{fam}_s{steps}", "0",
+                         f"C={c:.2e}_loss={loss:.3f}"))
+    lever = None
+    try:
+        moe_law = SL.LossLaw.fit([r["compute"] for r in detail["moe"]],
+                                 [r["loss"] for r in detail["moe"]])
+        dense_law = SL.LossLaw.fit([r["compute"] for r in detail["dense"]],
+                                   [r["loss"] for r in detail["dense"]])
+        c_mid = detail["moe"][-2]["compute"]
+        lever = SL.efficiency_lever(moe_law, dense_law, c_mid)
+        lever = float(min(lever, 100.0))   # tiny-run fits can explode
+        rows.append(("scaling_efficiency_lever", "0",
+                     f"{lever:.2f}x_paper~3x"))
+    except Exception as e:  # fits can fail on tiny noisy runs
+        rows.append(("scaling_efficiency_lever", "0", f"fit_failed_{e!r}"))
+    # hyper-param law from a small grid at the smallest width
+    grid = []
+    for b in (4, 8):
+        for lr in (1e-3, 2e-3, 4e-3):
+            loss = _train(_dense(48), 10 if fast else 25, b, lr, seed=1)
+            grid.append(SL.GridResult(6.0 * _dense(48).active_param_count()
+                                      * b * SEQ * 25, b, lr, loss))
+    cs, bb, ll, _ = SL.best_per_budget(grid)
+    detail["grid_best"] = {"compute": cs, "batch": bb, "lr": ll}
+    rows.append(("scaling_grid_best", "0",
+                 f"best_batch={bb}_best_lr={ll}"))
+    return rows, {**detail, "efficiency_lever": lever, "paper_lever": 3.0}

@@ -1,0 +1,82 @@
+"""Fig. 18: optimized (content-target) vs original (label-target)
+perplexity evaluation across early-training checkpoints of a real tiny
+model — content scoring shows a stable capability-growth trend while
+label scoring hovers near chance."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import api
+from repro.configs.base import get_smoke_config
+from repro.data.pipeline import DataPipeline, PipelineConfig
+from repro.evals import harness as H
+from repro.launch.mesh import make_local_mesh
+from repro.optim import adamw
+
+SEQ = 48   # >= longest eval sequence (label-mode: ctx + K*(1+opt) + 1)
+
+
+def run(fast=False):
+    cfg = dataclasses.replace(
+        get_smoke_config("phi3-mini-3.8b"), d_model=128, d_ff=256)
+    mesh = make_local_mesh(1, 1)
+    runner = api.Runner(cfg, mesh, max_seq=SEQ)
+    params = runner.init_params(0)
+    opt = adamw.init_opt_state(params)
+    step = jax.jit(runner.make_train_step(8))
+    score_jit = jax.jit(runner.make_score_fn(batch_size=1, seq_len=SEQ))
+
+    # training stream that CONTAINS the eval task's stride patterns
+    items = H.make_mc_dataset(24 if fast else 40, vocab=cfg.vocab_size,
+                              seed=0)
+    rs = np.random.RandomState(0)
+
+    def pattern_batch():
+        toks = np.zeros((8, SEQ), np.int32)
+        for r in range(8):
+            stride = 7 + rs.randint(5)
+            base = rs.randint(cfg.vocab_size - 64)
+            toks[r] = (base + stride * np.arange(SEQ)) % cfg.vocab_size
+        return {"tokens": jnp.asarray(toks[:, :-1]),
+                "labels": jnp.asarray(toks[:, 1:])}
+
+    def score_fn(seq, mask):
+        pad = SEQ - len(seq)
+        t = np.pad(seq, (0, pad)).astype(np.int32)
+        m = np.pad(mask, (0, pad)).astype(np.float32)
+        return float(score_jit(params, jnp.asarray(t)[None],
+                               jnp.asarray(m)[None])[0])
+
+    curves = {"content": [], "label": []}
+    ckpts = 4 if fast else 6
+    steps_per = 10 if fast else 20
+    i = 0
+    for _ in range(ckpts):
+        curves["content"].append(
+            H.ppl_eval_content(items, score_fn)["accuracy"])
+        curves["label"].append(
+            H.ppl_eval_label(items, score_fn,
+                             label_tokens=[1, 2, 3, 4])["accuracy"])
+        for _ in range(steps_per):
+            b = pattern_batch()
+            # fix seq mismatch: tokens (8, SEQ-1); pad to SEQ? use SEQ-1 step
+            params, opt, _ = step(params, opt,
+                                  {"tokens": b["tokens"],
+                                   "labels": b["labels"]},
+                                  jnp.int32(i), jax.random.PRNGKey(i),
+                                  jnp.float32(2e-3))
+            i += 1
+    # consistency: same eval run twice (deterministic scorer) -> 0 deviation
+    a = H.ppl_eval_content(items, score_fn)
+    b = H.ppl_eval_content(items, score_fn)
+    dev = H.consistency(a, b)["mean_abs_deviation"]
+    rows = [
+        ("eval_content_curve", "0",
+         "->".join(f"{x:.2f}" for x in curves["content"])),
+        ("eval_label_curve", "0",
+         "->".join(f"{x:.2f}" for x in curves["label"])),
+        ("eval_consistency_dev", "0", f"{dev:.4f}_paper<0.005"),
+    ]
+    return rows, {"curves": curves, "consistency_dev": dev}

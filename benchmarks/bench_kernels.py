@@ -1,0 +1,57 @@
+"""Pallas kernel micro-timings (interpret mode on CPU: correctness-path
+cost, NOT TPU performance) + the analytic HBM-traffic saving of the fused
+NormHead (the kernel's reason to exist)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def run(fast=False):
+    rs = np.random.RandomState(0)
+    rows = []
+    # grouped_matmul
+    lhs = jnp.asarray(rs.randn(256, 128), jnp.float32)
+    rhs = jnp.asarray(rs.randn(8, 128, 128) * 0.1, jnp.float32)
+    gs = jnp.asarray([32] * 8, jnp.int32)
+    us = _time(lambda: ops.grouped_matmul(lhs, rhs, gs, interpret=True))
+    rows.append(("kernel_grouped_matmul_256x128x128", f"{us:.0f}",
+                 "interpret_mode"))
+    # normhead
+    x = jnp.asarray(rs.randn(128, 256), jnp.float32)
+    w = jnp.asarray(rs.randn(512, 256), jnp.float32)
+    us = _time(lambda: ops.normhead_logits(x, w, interpret=True))
+    rows.append(("kernel_normhead_128x256x512", f"{us:.0f}",
+                 "interpret_mode"))
+    # analytic HBM saving for Ling-Plus head: unfused reads W, writes W_n,
+    # reads W_n; fused reads W once.
+    V, d = 126464, 8192
+    saved = 2 * V * d * 2 / 1e9
+    rows.append(("kernel_normhead_hbm_saving", "0",
+                 f"{saved:.1f}GB_per_step_ling_plus"))
+    # wkv6
+    B, T, H, hd = 2, 128, 2, 64
+    args = [jnp.asarray(rs.randn(B, T, H, hd) * 0.3, jnp.float32)
+            for _ in range(3)]
+    w = jnp.asarray(rs.uniform(0.8, 0.99, (B, T, H, hd)), jnp.float32)
+    u = jnp.asarray(rs.randn(H, hd) * 0.2, jnp.float32)
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    us = _time(lambda: ops.wkv6(args[0], args[1], args[2], w, u, s0,
+                                interpret=True))
+    rows.append((f"kernel_wkv6_{B}x{T}x{H}x{hd}", f"{us:.0f}",
+                 "interpret_mode"))
+    return rows, {"note": "interpret-mode timings validate correctness "
+                          "path; TPU perf comes from the Mosaic build"}
+
+
+def _time(fn, reps=2):
+    r = fn()
+    jax.block_until_ready(r)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn()
+        jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / reps * 1e6

@@ -1,0 +1,37 @@
+"""§Dry-run / §Roofline: aggregate the per-(arch x shape x mesh) dry-run
+artifacts into the roofline table (also rendered into EXPERIMENTS.md)."""
+import glob
+import json
+import os
+
+from repro import roofline as R
+
+
+def run(fast=False):
+    rows = []
+    table = []
+    for path in sorted(glob.glob("experiments/dryrun/*.json")):
+        rec = json.load(open(path))
+        tag = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+        if rec["status"] == "skipped":
+            table.append({**rec})
+            continue
+        if rec["status"] != "ok":
+            rows.append((f"roofline_{tag}", "0", "ERROR"))
+            continue
+        r = rec["roofline"]
+        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        rows.append((f"roofline_{tag}", f"{dom*1e6:.0f}",
+                     f"bn={r['bottleneck']}_useful={r['useful_ratio']:.2f}"))
+        table.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"],
+            "bottleneck": r["bottleneck"],
+            "useful_ratio": r["useful_ratio"],
+            "status": "ok",
+        })
+    if not table:
+        rows.append(("roofline", "0",
+                     "no_dryrun_artifacts_run_repro.launch.dryrun"))
+    return rows, {"table": table}

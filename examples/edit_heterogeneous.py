@@ -1,0 +1,46 @@
+"""EDiT on heterogeneous workers: 3 clusters with different speeds train a
+tiny model with time-based synchronization; one worker goes rogue mid-run
+and is eliminated by the pseudo-gradient penalty.
+
+    PYTHONPATH=src python examples/edit_heterogeneous.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.configs.base import get_smoke_config
+from repro.core.edit import EDiTConfig, EDiTTrainer
+from repro.data.pipeline import DataPipeline, PipelineConfig
+from repro.launch.mesh import make_local_mesh
+from repro.optim import adamw
+
+cfg = get_smoke_config("phi3-mini-3.8b")
+runner = api.Runner(cfg, make_local_mesh(1, 1), max_seq=64)
+step = jax.jit(runner.make_train_step(2))
+params = runner.init_params(0)
+
+ROGUE_AFTER = 3
+
+def worker_step(w, opt, batch, i, lr):
+    if opt is None:
+        opt = adamw.init_opt_state(w)
+    jb = {k: jnp.asarray(v) for k, v in batch.items()}
+    w, opt, m = step(w, opt, jb, jnp.int32(i), jax.random.PRNGKey(i),
+                     jnp.float32(lr))
+    return w, opt, m["loss"]
+
+edit = EDiTTrainer(params, worker_step,
+                   EDiTConfig(sync_every=3, time_threshold_s=1.0,
+                              anomaly_sigma=2.0),
+                   num_workers=3, worker_speeds=[1.0, 1.5, 0.7])
+pipes = [DataPipeline(PipelineConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                     batch_size=2, seed=s))
+         for s in range(3)]
+for r in range(6):
+    batches = [[p.next_batch() for _ in range(6)] for p in pipes]
+    if r >= ROGUE_AFTER:
+        # worker 2's "cluster" corrupts its replica (hardware fault model)
+        edit.workers[2] = jax.tree.map(lambda x: x * 30.0, edit.workers[2])
+    rec = edit.round(batches, lr=1e-3)
+    print(f"round {r}: loss={rec['mean_loss']:.3f} kept={rec['kept']} "
+          f"weights={rec['weights']}")

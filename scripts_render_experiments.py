@@ -1,0 +1,118 @@
+"""Render EXPERIMENTS.md §Dry-run/§Roofline tables from experiments/ JSONs.
+
+    PYTHONPATH=src python scripts_render_experiments.py
+
+Writes the generated tables into EXPERIMENTS.md between the AUTOGEN
+markers, preserving hand-written analysis around them.
+"""
+import glob
+import json
+
+ARCHS = ["phi3-mini-3.8b", "rwkv6-3b", "chameleon-34b", "h2o-danube-1.8b",
+         "deepseek-moe-16b", "granite-moe-3b-a800m", "moonshot-v1-16b-a3b",
+         "whisper-tiny", "recurrentgemma-2b", "nemotron-4-15b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt(s):
+    if s >= 1:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s*1e3:.1f}ms"
+    return f"{s*1e6:.0f}us"
+
+
+def load(dirname):
+    recs = {}
+    for f in glob.glob(f"experiments/{dirname}/*.json"):
+        r = json.load(open(f))
+        tag = f.split("__")[-1].replace(".json", "")
+        key = (r["arch"], r["shape"], r["mesh"],
+               tag if dirname == "perf" else "")
+        recs[key] = r
+    return recs
+
+
+def roofline_table():
+    recs = load("dryrun")
+    lines = ["| arch | shape | mesh | compute | memory | collective | "
+             "bottleneck | useful | compile |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    n_ok = n_skip = 0
+    for a in ARCHS:
+        for sh in SHAPES:
+            for mesh in ("16x16", "2x16x16"):
+                r = recs.get((a, sh, mesh, ""))
+                if r is None:
+                    continue
+                if r["status"] == "skipped":
+                    if mesh == "16x16":
+                        lines.append(f"| {a} | {sh} | both | — | — | — | "
+                                     f"*skipped (full attention)* | — | — |")
+                        n_skip += 1
+                    continue
+                if r["status"] != "ok":
+                    lines.append(f"| {a} | {sh} | {mesh} | ERROR |||||")
+                    continue
+                n_ok += 1
+                rl = r["roofline"]
+                lines.append(
+                    f"| {a} | {sh} | {mesh} | {fmt(rl['compute_s'])} | "
+                    f"{fmt(rl['memory_s'])} | {fmt(rl['collective_s'])} | "
+                    f"{rl['bottleneck']} | {rl['useful_ratio']:.2f} | "
+                    f"{r['compile_s']:.0f}s |")
+    lines.append("")
+    lines.append(f"*{n_ok} (arch × shape × mesh) combinations lowered and "
+                 f"compiled; {n_skip} designed long_500k skips "
+                 f"(full-attention architectures, run on both meshes).*")
+    return "\n".join(lines)
+
+
+def perf_table():
+    recs = load("perf")
+    base = load("dryrun")
+    lines = ["| pair | iteration | compute | memory | collective | "
+             "bottleneck | useful |",
+             "|---|---|---|---|---|---|---|"]
+    for arch in ("deepseek-moe-16b", "rwkv6-3b", "nemotron-4-15b"):
+        b = base.get((arch, "train_4k", "16x16", ""))
+        if b and b["status"] == "ok":
+            rl = b["roofline"]
+            lines.append(
+                f"| {arch} × train_4k | **baseline (paper-faithful)** | "
+                f"{fmt(rl['compute_s'])} | {fmt(rl['memory_s'])} | "
+                f"{fmt(rl['collective_s'])} | {rl['bottleneck']} | "
+                f"{rl['useful_ratio']:.2f} |")
+        tags = [t for t in ("base_recheck", "it0_full_sched", "it1_batched",
+                            "it1_chunk64", "it1_int8sp", "it2_cf125",
+                            "it2_chunk256", "it2_bf16gather",
+                            "it3_bf16gather", "it3_chunk128_int8",
+                            "it4_int8sp")
+                if (arch, "train_4k", "16x16", t) in recs]
+        for t in tags:
+            r = recs[(arch, "train_4k", "16x16", t)]
+            if r["status"] != "ok":
+                lines.append(f"| {arch} × train_4k | {t} | ERROR |||||")
+                continue
+            rl = r["roofline"]
+            lines.append(
+                f"| {arch} × train_4k | {t} | {fmt(rl['compute_s'])} | "
+                f"{fmt(rl['memory_s'])} | {fmt(rl['collective_s'])} | "
+                f"{rl['bottleneck']} | {rl['useful_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    doc = open("EXPERIMENTS.md").read()
+    for marker, content in (("ROOFLINE", roofline_table()),
+                            ("PERF", perf_table())):
+        start = f"<!-- AUTOGEN:{marker} -->"
+        end = f"<!-- /AUTOGEN:{marker} -->"
+        i, j = doc.index(start), doc.index(end)
+        doc = doc[:i + len(start)] + "\n" + content + "\n" + doc[j:]
+    open("EXPERIMENTS.md", "w").write(doc)
+    print("rendered")
+
+
+if __name__ == "__main__":
+    main()

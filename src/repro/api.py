@@ -1,0 +1,295 @@
+"""High-level runner: builds jitted, shard_mapped step functions per
+(arch config x mesh x mode).  This is the public API used by the trainers,
+the serving engine, the dry-run, and the tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+from repro.optim import adamw
+from repro.sharding import AxisEnv, make_axis_env
+
+
+def _shard_map(fn, mesh, in_specs, out_specs):
+    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+
+
+def batch_sharding(env: AxisEnv, global_batch: int) -> Any:
+    """Batch dim spec: sharded over dp when divisible, else replicated
+    (long_500k has batch=1 < dp and is replicated by design)."""
+    if global_batch % env.dp == 0:
+        return env.dp_axes if len(env.dp_axes) > 1 else env.dp_axes[0]
+    return None
+
+
+@dataclasses.dataclass
+class Runner:
+    cfg: ModelConfig
+    mesh: jax.sharding.Mesh
+    flags: M.RunFlags = M.DEFAULT_FLAGS
+    fsdp: bool = True
+    seq_parallel: bool = True
+    max_seq: int = 4096
+    sp_comm: str = "native"            # "native" | "int8"
+    gather_cast: bool = True
+
+    def __post_init__(self):
+        self.env = make_axis_env(self.mesh, fsdp=self.fsdp,
+                                 seq_parallel=self.seq_parallel,
+                                 gather_cast=self.gather_cast)
+        if self.sp_comm != "native":
+            import dataclasses as _dc
+            self.env = _dc.replace(self.env, sp_comm=self.sp_comm)
+        self.specs, self.shapes = M.param_specs(self.cfg, self.env,
+                                                self.max_seq)
+        self.mesh_sizes = dict(zip(self.mesh.axis_names,
+                                   self.mesh.devices.shape))
+
+    # -- params --------------------------------------------------------------
+    def init_params(self, seed: int = 0):
+        """Materialize params, sharded per the spec tree."""
+        def init_fn():
+            p, _ = M.init_model(jax.random.PRNGKey(seed), self.cfg, self.env,
+                                self.max_seq)
+            return p
+        shardings = jax.tree.map(
+            lambda s: jax.sharding.NamedSharding(self.mesh, s), self.specs,
+            is_leaf=lambda x: isinstance(x, P))
+        return jax.jit(init_fn, out_shardings=shardings)()
+
+    def abstract_params(self):
+        """ShapeDtypeStructs with shardings attached (dry-run path)."""
+        shardings = jax.tree.map(
+            lambda s: jax.sharding.NamedSharding(self.mesh, s), self.specs,
+            is_leaf=lambda x: isinstance(x, P))
+        return jax.tree.map(
+            lambda sh, sd: jax.ShapeDtypeStruct(sh.shape, sh.dtype,
+                                                sharding=sd),
+            self.shapes, shardings)
+
+    # -- batch specs ----------------------------------------------------------
+    def train_batch_specs(self, global_batch: int) -> Dict[str, P]:
+        b = batch_sharding(self.env, global_batch)
+        specs = {"tokens": P(b, None), "labels": P(b, None)}
+        if self.cfg.is_encoder_decoder:
+            specs["enc_frames"] = P(b, None, None)
+        return specs
+
+    def train_batch_shapes(self, shape: ShapeConfig) -> Dict[str, Any]:
+        B, S = shape.global_batch, shape.seq_len
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+               "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if self.cfg.is_encoder_decoder:
+            out["enc_frames"] = jax.ShapeDtypeStruct(
+                (B, self.cfg.encoder_seq_len, self.cfg.d_model), jnp.bfloat16)
+        return out
+
+    # -- train step ------------------------------------------------------------
+    def make_train_step(self, global_batch: int,
+                        opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig()):
+        cfg, env, flags = self.cfg, self.env, self.flags
+        pspecs, mesh_sizes = self.specs, self.mesh_sizes
+        bspecs = self.train_batch_specs(global_batch)
+        ospecs = adamw.opt_state_specs(pspecs)
+
+        def step_fn(params, opt_state, batch, step, rng, lr):
+            rng = jax.random.fold_in(rng, jax.lax.axis_index(env.dp_axes))
+
+            def lf(p):
+                return M.loss_fn(cfg, env, p, batch, step=step, rng=rng,
+                                 flags=flags)
+
+            (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(
+                params)
+            grads = adamw.reduce_replicated_grads(grads, pspecs, env)
+            gnorm = adamw.global_grad_norm(grads, pspecs, env, mesh_sizes)
+            scale = jnp.minimum(1.0, opt_cfg.clip_norm
+                                / jnp.maximum(gnorm, 1e-12))
+            params, opt_state = adamw.apply_updates(
+                params, grads, opt_state, lr, opt_cfg, grad_scale=scale)
+            metrics = dict(metrics, **{"grad_norm": gnorm, "loss": loss})
+            return params, opt_state, metrics
+
+        n_metrics_specs = P()
+        in_specs = (pspecs, ospecs, bspecs, P(), P(), P())
+        out_specs = (pspecs, ospecs, n_metrics_specs)
+        return _shard_map(step_fn, self.mesh, in_specs, out_specs)
+
+    # -- eval / grads-only (EDiT workers use this) ------------------------------
+    def make_loss_and_grad(self, global_batch: int):
+        cfg, env, flags = self.cfg, self.env, self.flags
+        bspecs = self.train_batch_specs(global_batch)
+
+        def fn(params, batch, step, rng):
+            rng = jax.random.fold_in(rng, jax.lax.axis_index(env.dp_axes))
+
+            def lf(p):
+                return M.loss_fn(cfg, env, p, batch, step=step, rng=rng,
+                                 flags=flags)
+
+            (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(
+                params)
+            grads = adamw.reduce_replicated_grads(grads, self.specs, env)
+            return loss, grads, metrics
+
+        in_specs = (self.specs, bspecs, P(), P())
+        out_specs = (P(), self.specs, P())
+        return _shard_map(fn, self.mesh, in_specs, out_specs)
+
+    # -- sequence scoring (evaluation harness) ---------------------------------
+    def make_score_fn(self, batch_size: int, seq_len: int):
+        """(tokens (B,S), mask (B,S)) -> per-sequence sum log p(token_t |
+        tokens_<t) over masked positions (perplexity-based eval)."""
+        cfg, env, flags = self.cfg, self.env, self.flags
+        b = batch_sharding(env, batch_size)
+
+        def fn(params, tokens, mask):
+            labels = jnp.where(mask[:, 1:] > 0, tokens[:, 1:], -1)
+            batch = {"tokens": tokens[:, :-1],
+                     "labels": labels.astype(jnp.int32)}
+            x, _, _, _ = M.forward(cfg, env, params, batch, train=False,
+                                   flags=flags)
+            from repro.models import embedding as emb
+            logits = emb.lm_logits(cfg, env, params["embed"], x)
+            B = tokens.shape[0]
+            lab = labels.reshape(-1)
+            v_loc = logits.shape[-1]
+            r = env.tp_index()
+            gid = r * v_loc + jnp.arange(v_loc)
+            logits = jnp.where(gid[None, :] < cfg.vocab_size, logits, -1e30)
+            m = env.pmax_tp(jax.lax.stop_gradient(
+                jnp.max(logits, axis=-1)))
+            se = env.psum_tp(jnp.sum(jnp.exp(logits - m[:, None]), axis=-1))
+            lse = m + jnp.log(se)
+            loc = lab - r * v_loc
+            in_rng = (loc >= 0) & (loc < v_loc)
+            picked = jnp.take_along_axis(
+                logits, jnp.clip(loc, 0, v_loc - 1)[:, None], axis=-1)[:, 0]
+            corr = env.psum_tp(jnp.where(in_rng, picked, 0.0))
+            tok_lp = jnp.where(lab >= 0, corr - lse, 0.0).reshape(B, -1)
+            return jnp.sum(tok_lp, axis=-1)
+
+        in_specs = (self.specs, P(b, None), P(b, None))
+        return _shard_map(fn, self.mesh, in_specs, P(b))
+
+    # -- prefill -----------------------------------------------------------------
+    def make_prefill(self, global_batch: int):
+        cfg, env, flags = self.cfg, self.env, self.flags
+        bspecs = {k: v for k, v in
+                  self.train_batch_specs(global_batch).items()
+                  if k != "labels"}
+        b = batch_sharding(env, global_batch)
+
+        def fn(params, batch):
+            x, _, _, caches = M.forward(cfg, env, params, batch,
+                                        train=False, flags=flags,
+                                        want_cache=True)
+            # last-token hidden state per sequence
+            B, S = batch["tokens"].shape
+            xB = x.reshape(B, S, -1)[:, -1]
+            from repro.models import embedding as emb
+            logits = emb.lm_logits(cfg, env, params["embed"], xB)
+            nxt = emb.sharded_argmax(env, logits)
+            return nxt.astype(jnp.int32), caches
+
+        caches = jax.eval_shape(
+            lambda: M.init_caches(cfg, env, 1, 8,
+                                  cross_len=cfg.encoder_seq_len or 8))
+        cache_specs = cache_partition_specs(cfg, env, caches, b)
+        in_specs = (self.specs, bspecs)
+        out_specs = (P(b), cache_specs)
+        return _shard_map(fn, self.mesh, in_specs, out_specs)
+
+    # -- decode -----------------------------------------------------------------
+    def make_decode_step(self, global_batch: int, seq_len: int):
+        cfg, env = self.cfg, self.env
+        b = batch_sharding(env, global_batch)
+        B_loc = (global_batch // env.dp if b is not None else global_batch)
+        caches = jax.eval_shape(
+            lambda: M.init_caches(cfg, env, B_loc, seq_len,
+                                  cross_len=cfg.encoder_seq_len))
+        cache_specs = cache_partition_specs(cfg, env, caches, b)
+
+        def fn(params, caches, token, pos):
+            return M.decode_step(cfg, env, params, caches, token, pos)
+
+        in_specs = (self.specs, cache_specs, P(b), P())
+        out_specs = (P(b), cache_specs)
+        return _shard_map(fn, self.mesh, in_specs, out_specs), cache_specs
+
+    def init_cache_shapes(self, global_batch: int, seq_len: int):
+        """GLOBAL cache ShapeDtypeStructs (local shapes scaled up by the
+        mesh axis sizes named in each leaf's PartitionSpec)."""
+        env = self.env
+        b = batch_sharding(env, global_batch)
+        B_loc = (global_batch // env.dp if b is not None else global_batch)
+        local = jax.eval_shape(
+            lambda: M.init_caches(self.cfg, env, B_loc, seq_len,
+                                  cross_len=self.cfg.encoder_seq_len))
+        specs = cache_partition_specs(self.cfg, env, local, b)
+        return globalize_shapes(local, specs, self.mesh_sizes), b
+
+
+def globalize_shapes(shape_tree, spec_tree, mesh_sizes):
+    """Scale local ShapeDtypeStructs to global per their PartitionSpecs."""
+    spec_leaves = jax.tree.leaves(spec_tree,
+                                  is_leaf=lambda x: isinstance(x, P))
+    shape_leaves, treedef = jax.tree.flatten(shape_tree)
+    assert len(spec_leaves) == len(shape_leaves)
+
+    def scale(sd, spec):
+        dims = list(sd.shape)
+        for i, part in enumerate(spec):
+            if part is None:
+                continue
+            names = part if isinstance(part, tuple) else (part,)
+            for n in names:
+                dims[i] *= mesh_sizes[n]
+        return jax.ShapeDtypeStruct(tuple(dims), sd.dtype)
+
+    return jax.tree.unflatten(
+        treedef, [scale(sd, sp) for sd, sp in zip(shape_leaves, spec_leaves)])
+
+
+def cache_partition_specs(cfg, env: AxisEnv, cache_tree, b):
+    """Build PartitionSpecs for a decode-cache pytree.
+
+    Local cache layouts (built inside shard_map with local sizes):
+      attn k/v   (B_loc, S_loc, KV, hd)   -> P(b, tp, None, None)
+      rwkv wkv   (B_loc, H_loc, hd, hd)   -> P(b, tp, None, None)
+      rwkv last_x / cmix_prev (B_loc, d)  -> P(b, None)
+      rglru h    (B_loc, dr_loc)          -> P(b, tp)
+      rglru conv (B_loc, 3, dr_loc)       -> P(b, None, tp)
+    Uniform-arch caches carry a leading layer dim (None).
+    """
+    tp = env.tp_axis
+    lead = 1 if (cfg.uniform_blocks and not cfg.is_encoder_decoder) else 0
+
+    def one_layer_spec(layer_cache):
+        out = {}
+        for k, v in layer_cache.items():
+            if k in ("self", "cross"):
+                out[k] = {"k": P(*([None] * lead), b, tp, None, None),
+                          "v": P(*([None] * lead), b, tp, None, None)}
+            elif k == "rwkv":
+                out[k] = {"wkv": P(*([None] * lead), b, tp, None, None),
+                          "last_x": P(*([None] * lead), b, None)}
+            elif k == "cmix_prev":
+                out[k] = P(*([None] * lead), b, None)
+            elif k == "rglru":
+                out[k] = {"h": P(*([None] * lead), b, tp),
+                          "conv": P(*([None] * lead), b, None, tp)}
+        return out
+
+    if lead:
+        return one_layer_spec(cache_tree)
+    return [one_layer_spec(c) for c in cache_tree]

@@ -1,0 +1,154 @@
+"""PCache — distributed checkpoint I/O (§2.3.1, C10).
+
+What transfers from the paper to this environment:
+
+  * sharded pytree save/load with a manifest (real array I/O);
+  * the **AI co-design writer-dispersal strategy**: instead of every DP
+    group's rank-0 writing from the same few physical nodes (contention!),
+    writers are assigned round-robin across nodes.  `assign_writers` is the
+    actual algorithm; `simulate_checkpoint_write` models the contention win
+    (Table 2: 70s vs 160s / 90s vs 240s shape) and the threaded benchmark
+    measures it for real on local disk;
+  * metadata caching for fast repeated loads;
+  * asynchronous (background-thread) writes so training continues — the
+    FUSE/shm interception of the paper is deployment detail, the overlap
+    is the system behaviour.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# writer dispersal (the paper's core scheduling idea)
+# ---------------------------------------------------------------------------
+
+
+def assign_writers(n_dp_groups: int, ranks_per_group: int, n_nodes: int,
+                   ranks_per_node: int, disperse: bool = True
+                   ) -> List[int]:
+    """Return the writer *global rank* for each DP group.
+
+    DP groups are strided across the cluster (Megatron layout: group g's
+    members are ranks {g + r * n_dp_groups}), so the default rank-0 writers
+    (`disperse=False`) all land on the first few physical nodes — the
+    contention the paper observed.  PCache (`disperse=True`) picks, per
+    group, the member on the least-loaded node (greedy), dispersing writes
+    across the cluster.
+    """
+    writers = []
+    load = [0] * n_nodes
+    for g in range(n_dp_groups):
+        members = [g + r * n_dp_groups for r in range(ranks_per_group)]
+        if not disperse:
+            w = members[0]
+        else:
+            w = min(members, key=lambda m: (load[(m // ranks_per_node)
+                                                 % n_nodes], m))
+        load[(w // ranks_per_node) % n_nodes] += 1
+        writers.append(w)
+    return writers
+
+
+def node_load(writers: Sequence[int], ranks_per_node: int) -> Dict[int, int]:
+    load: Dict[int, int] = {}
+    for w in writers:
+        load[w // ranks_per_node] = load.get(w // ranks_per_node, 0) + 1
+    return load
+
+
+def simulate_checkpoint_write(n_dp_groups: int, ranks_per_group: int,
+                              n_nodes: int, ranks_per_node: int,
+                              bytes_per_group: float,
+                              node_bw: float = 3e9,
+                              disperse: bool = True) -> float:
+    """Write time = max over nodes of (groups_on_node * bytes) / node_bw."""
+    writers = assign_writers(n_dp_groups, ranks_per_group, n_nodes,
+                             ranks_per_node, disperse)
+    load = node_load(writers, ranks_per_node)
+    worst = max(load.values())
+    return worst * bytes_per_group / node_bw
+
+
+# ---------------------------------------------------------------------------
+# real sharded save/load
+# ---------------------------------------------------------------------------
+
+
+class PCache:
+    """Local-filesystem checkpoint store with dispersed parallel writers."""
+
+    def __init__(self, root: str, n_writers: int = 4):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self.n_writers = n_writers
+        self._meta_cache: Dict[str, Dict] = {}
+        self._async_jobs: List[threading.Thread] = []
+
+    # -- save -------------------------------------------------------------
+    def save(self, name: str, tree: Any, block: bool = True) -> str:
+        path = os.path.join(self.root, name)
+        os.makedirs(path, exist_ok=True)
+        leaves, treedef = jax.tree.flatten(tree)
+        arrays = [np.asarray(jax.device_get(l)) for l in leaves]
+        manifest = {
+            "treedef": str(treedef),
+            "n_leaves": len(arrays),
+            "leaves": [{"file": f"leaf_{i}.npy", "shape": list(a.shape),
+                        "dtype": str(a.dtype)} for i, a in enumerate(arrays)],
+            "time": time.time(),
+        }
+
+        def write_all():
+            # dispersed parallel writers (one pool worker ~ one node)
+            with ThreadPoolExecutor(self.n_writers) as ex:
+                futs = [ex.submit(np.save, os.path.join(path, f"leaf_{i}"),
+                                  a) for i, a in enumerate(arrays)]
+                for f in futs:
+                    f.result()
+            with open(os.path.join(path, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+
+        if block:
+            write_all()
+        else:
+            t = threading.Thread(target=write_all, daemon=True)
+            t.start()
+            self._async_jobs.append(t)
+        return path
+
+    def wait(self):
+        for t in self._async_jobs:
+            t.join()
+        self._async_jobs.clear()
+
+    # -- load -------------------------------------------------------------
+    def manifest(self, name: str) -> Dict:
+        if name in self._meta_cache:                 # metadata cache
+            return self._meta_cache[name]
+        with open(os.path.join(self.root, name, "manifest.json")) as f:
+            m = json.load(f)
+        self._meta_cache[name] = m
+        return m
+
+    def load(self, name: str, like: Any) -> Any:
+        m = self.manifest(name)
+        path = os.path.join(self.root, name)
+        leaves = [np.load(os.path.join(path, e["file"]))
+                  for e in m["leaves"]]
+        treedef = jax.tree.structure(like)
+        assert treedef.num_leaves == len(leaves), "tree mismatch"
+        return jax.tree.unflatten(treedef, leaves)
+
+    def list_checkpoints(self) -> List[str]:
+        return sorted(d for d in os.listdir(self.root)
+                      if os.path.isdir(os.path.join(self.root, d)))

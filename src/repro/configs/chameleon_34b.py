@@ -1,0 +1,21 @@
+"""chameleon-34b [vlm] — early fusion, VQ image tokens [arXiv:2405.09818].
+
+Early fusion means image patches arrive as ordinary vocabulary tokens from a
+VQ tokenizer; that tokenizer is the allowed modality-frontend stub, so the
+transformer consumes a plain token stream over the fused 65536 vocab.
+"""
+import dataclasses
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="chameleon-34b", family="vlm", source="arXiv:2405.09818",
+    n_layers=48, d_model=8192, n_heads=64, n_kv_heads=8, d_ff=22016,
+    vocab_size=65536, block_pattern=("attn",), mlp_act="swiglu",
+    early_fusion_vlm=True,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=256, n_heads=4, n_kv_heads=2, d_ff=512,
+        vocab_size=512)

@@ -1,0 +1,16 @@
+"""nemotron-4-15b [dense] — GQA, squared-ReLU MLP [arXiv:2402.16819]."""
+import dataclasses
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="nemotron-4-15b", family="dense", source="arXiv:2402.16819",
+    n_layers=32, d_model=6144, n_heads=48, n_kv_heads=8, d_ff=24576,
+    vocab_size=256000, block_pattern=("attn",), mlp_act="squared_relu",
+    norm_type="layernorm",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=256, n_heads=4, n_kv_heads=2, d_ff=512,
+        vocab_size=512)

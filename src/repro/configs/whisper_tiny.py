@@ -1,0 +1,23 @@
+"""whisper-tiny [audio] — enc-dec transformer backbone [arXiv:2212.04356].
+
+The mel-spectrogram + conv frontend is the allowed stub: input_specs()
+provides precomputed (B, 1500, d_model) frame embeddings for the encoder.
+"""
+import dataclasses
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="whisper-tiny", family="audio", source="arXiv:2212.04356",
+    n_layers=4, d_model=384, n_heads=6, n_kv_heads=6, d_ff=1536,
+    vocab_size=51865, block_pattern=("attn",), mlp_act="gelu",
+    norm_type="layernorm", use_rope=False,
+    # 1500 conv frames, right-padded to 1504 by the stub frontend for
+    # tp=16 divisibility of the cross-attention cache (see DESIGN.md)
+    is_encoder_decoder=True, encoder_layers=4, encoder_seq_len=1504,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, encoder_layers=2, d_model=256, n_heads=4,
+        n_kv_heads=4, d_ff=512, vocab_size=512, encoder_seq_len=64)

@@ -1,0 +1,201 @@
+"""Fine-grained Mixture-of-Experts FFN (paper §3.2.1, C1).
+
+Design (TPU adaptation of the paper's group_gemm hot path — see DESIGN.md §3):
+
+* Routed experts are **expert-parallel over the tp ('model') axis**: rank r
+  owns experts [r*E_l, (r+1)*E_l).  Activations entering the FFN are full
+  per-dp-shard (replicated over tp, the Megatron layout), so no token
+  all-to-all is required — each rank computes its experts' contribution for
+  all of its dp-shard's tokens and the combine is the same reduce-scatter
+  every TP block already performs.
+* Within a rank the expert compute is a **grouped (ragged) matmul**: token
+  slots are sorted by local expert id and fed to `grouped_matmul` (the
+  Pallas kernel target; `jax.lax.ragged_dot` is the lowering used under
+  jit).  With tp=1 the buffer holds all T*k slots — exactly the paper's
+  *dropless* routing.  With tp>1 each rank's buffer is
+  ceil(T*k/tp * capacity_factor): the Stochastic Routing Warmup plus the
+  balance loss keep expert load near-uniform, so cf=2.0 drops ~nothing
+  (tracked by the `moe/dropped_frac` metric).
+* The always-on **shared expert** (Eq. 2) is an ordinary tensor-parallel
+  FFN fused into the same partial-sum.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.core import router as router_lib
+from repro.models import layers as L
+from repro.sharding import AxisEnv, fsdp_spec, pad_to_multiple
+
+
+def padded_experts(cfg, env: AxisEnv) -> Tuple[int, int]:
+    """(E_padded, E_local): experts padded to a multiple of tp (dummy
+    experts are never routed to — e.g. granite's 40 experts on tp=16)."""
+    ep = pad_to_multiple(cfg.moe.n_experts, env.tp)
+    return ep, ep // env.tp
+
+
+def capacity(cfg, env: AxisEnv, n_tokens: int) -> int:
+    """Static per-rank dispatch-buffer rows."""
+    m = cfg.moe
+    slots = n_tokens * m.top_k
+    if env.tp == 1:
+        return slots                       # dropless
+    cap = int(slots * m.capacity_factor / env.tp)
+    cap = min(pad_to_multiple(max(cap, 8), 8), slots)
+    return cap
+
+
+def init_moe(key, cfg, env: AxisEnv):
+    m = cfg.moe
+    d = cfg.d_model
+    ep, _ = padded_experts(cfg, env)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    out_scale = 0.02 / max(cfg.n_layers, 1) ** 0.5
+
+    params: Dict = {}
+    specs: Dict = {}
+    params["router"], specs["router"] = router_lib.init_router(ks[0], cfg, env)
+    # routed expert weights: (E_pad, d, ff_e) — experts over tp, FSDP over d
+    params["we1"] = L.dense_init(ks[1], (ep, d, m.expert_d_ff), dt)
+    params["we2"] = L.dense_init(ks[2], (ep, m.expert_d_ff, d), dt, out_scale)
+    specs["we1"] = fsdp_spec(env, 3, 1, 0)
+    specs["we2"] = fsdp_spec(env, 3, 2, 0)
+    if cfg.mlp_act in L.GATED_ACTS:
+        params["we3"] = L.dense_init(ks[3], (ep, d, m.expert_d_ff), dt)
+        specs["we3"] = fsdp_spec(env, 3, 1, 0)
+    if m.n_shared_experts > 0:
+        params["shared"], specs["shared"] = L.init_mlp(
+            ks[4], cfg, env, d_ff=m.shared_ff, scale_out=out_scale)
+    return params, specs
+
+
+def grouped_ffn(cfg, w1, w2, w3, xs, group_sizes):
+    """Grouped expert FFN over expert-sorted rows.
+
+    xs (cap, d), w* (E_l, d, ff)/(E_l, ff, d), group_sizes (E_l,).
+    Rows beyond sum(group_sizes) produce zeros (ragged_dot semantics).
+    This is the compute the `kernels/grouped_matmul` Pallas kernel targets.
+    """
+    h = jax.lax.ragged_dot(xs, w1, group_sizes)
+    if cfg.mlp_act in L.GATED_ACTS:
+        h = L._act(cfg.mlp_act, h) * jax.lax.ragged_dot(xs, w3, group_sizes)
+    else:
+        h = L._act(cfg.mlp_act, h)
+    return jax.lax.ragged_dot(h, w2, group_sizes)
+
+
+def expert_capacity(cfg, env: AxisEnv, n_tokens: int) -> int:
+    """Per-EXPERT dispatch rows for the batched path (global semantics:
+    C_e = T*k*cf/E, so total rows match the per-rank ragged capacity)."""
+    m = cfg.moe
+    ep, _ = padded_experts(cfg, env)
+    c = int(n_tokens * m.top_k * m.capacity_factor / m.n_experts)
+    return min(pad_to_multiple(max(c, 8), 8), n_tokens * m.top_k)
+
+
+def moe_ffn(cfg, env: AxisEnv, params, x: jax.Array, *,
+            step: Optional[jax.Array] = None,
+            rng: Optional[jax.Array] = None,
+            train: bool = True,
+            dispatch: str = "auto"):
+    """x (T, d) full per dp-shard -> (partial (T, d), aux_loss, metrics).
+
+    The partial output must be combined over tp by the caller (sp_scatter),
+    exactly like a row-parallel dense FFN.
+
+    dispatch:
+      "ragged"  sort + jax.lax.ragged_dot (exactly dropless at tp=1; XLA
+                without a grouped-gemm lowering computes it as a dense
+                batched dot over local experts — E_loc x FLOP waste);
+      "batched" per-expert-capacity blocks + plain batched einsum — the
+                TPU-native form (equal MXU tiles per expert, no waste);
+                drops are bounded per-expert instead of per-rank;
+      "auto"    batched when tp>1, ragged (dropless) at tp=1.
+    """
+    m = cfg.moe
+    T, d = x.shape
+    cdt = jnp.dtype(cfg.compute_dtype)
+    ep, e_loc = padded_experts(cfg, env)
+    cap = capacity(cfg, env, T)
+    if dispatch == "auto":
+        dispatch = "batched" if env.tp > 1 else "ragged"
+
+    top_w, top_i, aux, metrics = router_lib.route(
+        cfg, env, params["router"], x, step=step, rng=rng, train=train)
+
+    # ---- local dispatch: sort token-slots by (local) expert --------------
+    r = env.tp_index()
+    lo = r * e_loc
+    flat_i = top_i.reshape(-1)                     # (T*k,)
+    flat_w = top_w.reshape(-1)
+    local_key = flat_i - lo
+    is_local = (local_key >= 0) & (local_key < e_loc)
+    sort_key = jnp.where(is_local, local_key, e_loc)   # non-local last
+    order = jnp.argsort(sort_key)                  # stable
+
+    w1 = env.gather_fsdp(params["we1"], 1, dtype=cdt)
+    w2 = env.gather_fsdp(params["we2"], 2, dtype=cdt)
+    w3 = (env.gather_fsdp(params["we3"], 1, dtype=cdt)
+          if "we3" in params else None)
+
+    if dispatch == "ragged":
+        sel = order[:cap]                          # (cap,) slot indices
+        tok = sel // m.top_k                       # token per slot
+        skey = sort_key[sel]                       # sorted expert keys
+        valid = skey < e_loc
+        # rows per local expert (only rows that made it into the buffer)
+        group_sizes = jnp.sum(
+            jax.nn.one_hot(jnp.where(valid, skey, e_loc), e_loc + 1,
+                           dtype=jnp.int32)[:, :e_loc], axis=0)
+        xs = jnp.take(x, tok, axis=0).astype(cdt)  # (cap, d) gather
+        out = grouped_ffn(cfg, w1, w2, w3, xs, group_sizes)   # (cap, d)
+        gates = (flat_w[sel] * valid).astype(cdt)
+        y = jnp.zeros((T, d), cdt).at[tok].add(out * gates[:, None])
+        n_kept = jnp.sum(valid)
+    else:
+        # per-expert-capacity batched dispatch: expert e's rows live at
+        # sorted positions [offset_e, offset_e + count_e); clip to C_e and
+        # lay them out as (E_loc, C_e, d) so the expert FFN is a plain
+        # batched einsum — equal MXU tiles per expert, no E_loc x dense
+        # waste, and the combine stays a scatter-add.
+        c_e = expert_capacity(cfg, env, T)
+        counts = jnp.sum(
+            jax.nn.one_hot(jnp.where(is_local, local_key, e_loc), e_loc + 1,
+                           dtype=jnp.int32)[:, :e_loc], axis=0)   # (E_loc,)
+        offsets = jnp.cumsum(counts) - counts
+        slot_idx = offsets[:, None] + jnp.arange(c_e)[None, :]    # (E,C)
+        slot_valid = jnp.arange(c_e)[None, :] < jnp.minimum(counts, c_e)[:, None]
+        slot = jnp.take(order, jnp.clip(slot_idx, 0, order.shape[0] - 1))
+        tok_e = slot // m.top_k                                   # (E,C)
+        xs = jnp.take(x, tok_e.reshape(-1), axis=0).astype(cdt)
+        xs = xs.reshape(e_loc, c_e, d)
+        h = jnp.einsum("ecd,edf->ecf", xs, w1)
+        if cfg.mlp_act in L.GATED_ACTS:
+            h = L._act(cfg.mlp_act, h) * jnp.einsum("ecd,edf->ecf", xs, w3)
+        else:
+            h = L._act(cfg.mlp_act, h)
+        out = jnp.einsum("ecf,efd->ecd", h, w2)                   # (E,C,d)
+        gates = (jnp.take(flat_w, slot.reshape(-1)).reshape(e_loc, c_e)
+                 * slot_valid).astype(cdt)
+        y = jnp.zeros((T, d), cdt).at[tok_e.reshape(-1)].add(
+            (out * gates[..., None]).reshape(-1, d))
+        n_kept = jnp.sum(jnp.minimum(counts, c_e))
+
+    # dropped-token telemetry (paper: dropless; cf headroom makes this ~0)
+    n_local = jnp.sum(is_local)
+    dropped = jnp.maximum(n_local - n_kept, 0)
+    metrics["moe/dropped_frac"] = env.pmean_dp(
+        env.psum_tp(dropped.astype(jnp.float32))
+        / jnp.maximum(env.psum_tp(n_local.astype(jnp.float32)), 1.0))
+
+    # ---- shared expert (Eq. 2): dense TP FFN fused into the partial ------
+    if m.n_shared_experts > 0:
+        y = y + L.apply_mlp(cfg, env, params["shared"], x.astype(cdt))
+
+    return y, aux, metrics

@@ -1,0 +1,36 @@
+"""NormHead (paper §3.2.3, Eq. 4, C4).
+
+The LM-head weight rows are L2-normalized before the logit matmul, removing
+weight-magnitude drift as a source of loss spikes / divergence.  The row
+norm is over d_model, which is *local* under our vocab-sharded head, so the
+normalization costs no communication.  `kernels/normhead.py` provides the
+fused Pallas version (normalize-on-the-fly inside the matmul tiles).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import AxisEnv
+
+
+def normalize_rows(w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """L2-normalize rows (vocab entries) of a (V_local, d) head weight."""
+    wf = w.astype(jnp.float32)
+    norm = jnp.sqrt(jnp.sum(wf * wf, axis=-1, keepdims=True))
+    return wf / jnp.maximum(norm, eps)
+
+
+def normhead_logits(cfg, env: AxisEnv, w_local: jax.Array, x: jax.Array
+                    ) -> jax.Array:
+    """x (T, d) -> vocab-local logits (T, V_local), fp32.
+
+    With norm_head=False this is a plain LM head (used for the
+    paper-faithful ablation of the assigned non-Ling architectures).
+    """
+    w = env.gather_fsdp(w_local, 1)  # FSDP over d (dim 1)
+    if cfg.norm_head:
+        wn = normalize_rows(w)
+    else:
+        wn = w.astype(jnp.float32)
+    return x.astype(jnp.float32) @ wn.T

@@ -1,0 +1,115 @@
+"""Loss-spike handling (paper §3.4.4 + §6.1, C6).
+
+Mechanisms, exactly as described:
+  * spike detection against a running loss statistic (EMA mean/std);
+  * narrow vs wide classification (consecutive spiking steps);
+  * **skip** the affected update (the trainer discards the step);
+  * **sample retry** — the spiking batch is saved and randomly re-injected
+    into later training;
+  * **automatic LR reduction** when a spike persists after retry.
+
+The detector is host-side (it consumes scalar losses), which matches the
+paper's monitoring system; the *skip* itself is applied by the trainer by
+not committing (params, opt_state) of the flagged step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SpikeConfig:
+    ema_decay: float = 0.98
+    sigma_threshold: float = 4.0     # spike if loss > mean + sigma*std
+    abs_threshold: float = 0.75      # ... or loss - mean > abs_threshold
+    wide_after: int = 3              # consecutive spikes => wide spike
+    lr_reduce_factor: float = 0.5    # persistent spike LR response
+    lr_reduce_steps: int = 50        # steps the reduction stays active
+    warmup_steps: int = 20           # no detection before stats settle
+
+
+@dataclasses.dataclass
+class SpikeEvent:
+    step: int
+    loss: float
+    kind: str                        # "narrow" | "wide"
+    action: str                      # "skip" | "skip+retry" | "skip+lr"
+
+
+class SpikeDetector:
+    def __init__(self, cfg: SpikeConfig = SpikeConfig()):
+        self.cfg = cfg
+        self.mean: Optional[float] = None
+        self.var: float = 0.0
+        self.n = 0
+        self.consecutive = 0
+        self.lr_reduced_until = -1
+        self.events: List[SpikeEvent] = []
+        self.retry_queue: Deque[Any] = deque()
+
+    # -- statistics -----------------------------------------------------------
+    def _update_stats(self, loss: float):
+        d = self.cfg.ema_decay
+        if self.mean is None:
+            self.mean, self.var = loss, 0.25
+        else:
+            delta = loss - self.mean
+            self.mean += (1 - d) * delta
+            self.var = d * self.var + (1 - d) * delta * delta
+
+    def is_spike(self, loss: float) -> bool:
+        if self.mean is None or self.n < self.cfg.warmup_steps:
+            return False
+        std = max(np.sqrt(self.var), 1e-3)
+        return (loss > self.mean + self.cfg.sigma_threshold * std
+                or loss - self.mean > self.cfg.abs_threshold)
+
+    # -- main entry -------------------------------------------------------------
+    def observe(self, step: int, loss: float, batch: Any = None
+                ) -> Dict[str, Any]:
+        """Returns {'skip': bool, 'lr_scale': float, 'kind': str|None}."""
+        self.n += 1
+        spike = self.is_spike(loss)
+        lr_scale = (self.cfg.lr_reduce_factor
+                    if step <= self.lr_reduced_until else 1.0)
+        if not spike:
+            self.consecutive = 0
+            self._update_stats(loss)
+            return {"skip": False, "lr_scale": lr_scale, "kind": None}
+
+        self.consecutive += 1
+        wide = self.consecutive >= self.cfg.wide_after
+        action = "skip+retry"
+        if batch is not None:
+            self.retry_queue.append(batch)      # re-inject later (§3.4.4)
+        if wide:
+            # persistent spike: also reduce LR for a window of steps
+            self.lr_reduced_until = step + self.cfg.lr_reduce_steps
+            action = "skip+lr"
+            lr_scale = self.cfg.lr_reduce_factor
+        self.events.append(SpikeEvent(step, loss, "wide" if wide else
+                                      "narrow", action))
+        # spiking losses do NOT update the running stats
+        return {"skip": True, "lr_scale": lr_scale,
+                "kind": "wide" if wide else "narrow"}
+
+    def pop_retry(self) -> Optional[Any]:
+        """Pull a saved batch for random re-injection."""
+        if self.retry_queue:
+            return self.retry_queue.popleft()
+        return None
+
+
+def inject_synthetic_spikes(losses: np.ndarray, steps: List[int],
+                            magnitude: float = 3.0) -> np.ndarray:
+    """Test/benchmark helper: overlay spikes on a loss curve."""
+    out = losses.copy()
+    for s in steps:
+        for j, decay in enumerate([1.0, 0.6, 0.3]):
+            if s + j < len(out):
+                out[s + j] += magnitude * decay
+    return out

@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: grouped (ragged) matmul — the paper's `group_gemm`
+MoE hot path (§1.2), adapted to the TPU (DESIGN.md §3).
+
+Contract (Megablox-style, group-aligned):
+  lhs (M, K): token rows sorted by expert, with every group's rows starting
+  at a multiple of `bm` (the wrapper in ops.py produces this layout);
+  rhs (G, K, N): per-expert weights;  tile_group (M/bm,): the expert id of
+  each row tile (scalar-prefetched so the rhs BlockSpec index_map can
+  select the expert's weight tile *before* the tile runs — this is the TPU
+  analogue of the CUDA grouped-GEMM pointer array).
+
+Grid = (M/bm, N/bn, K/bk), MXU-aligned tiles, fp32 VMEM accumulator that
+is written back once on the last K step.  Rows whose tile maps to the
+overflow group id G produce zeros (ragged_dot semantics).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(tile_group_ref, lhs_ref, rhs_ref, out_ref, acc_ref, *,
+            n_k: int, n_groups: int):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        lhs_ref[...], rhs_ref[0],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == n_k - 1)
+    def _done():
+        i = pl.program_id(0)
+        gid = tile_group_ref[i]
+        # overflow tiles (gid == n_groups) emit zeros
+        valid = (gid < n_groups).astype(jnp.float32)
+        out_ref[...] = (acc_ref[...] * valid).astype(out_ref.dtype)
+
+
+def grouped_matmul_aligned(lhs: jax.Array, rhs: jax.Array,
+                           tile_group: jax.Array, *,
+                           bm: int = 128, bk: int = 128, bn: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """lhs (M, K) group-aligned; rhs (G, K, N); tile_group (M/bm,) int32
+    (values in [0, G], G = overflow/zero tile).  Returns (M, N)."""
+    M, K = lhs.shape
+    G, K2, N = rhs.shape
+    assert K == K2 and M % bm == 0 and K % bk == 0 and N % bn == 0
+    n_m, n_n, n_k = M // bm, N // bn, K // bk
+    # pad rhs with a zero overflow group so gid==G is addressable
+    rhs_p = jnp.concatenate([rhs, jnp.zeros((1, K, N), rhs.dtype)], axis=0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_m, n_n, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k, tg: (i, k)),
+            pl.BlockSpec((1, bk, bn), lambda i, j, k, tg: (tg[i], k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, tg: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    fn = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k, n_groups=G),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), lhs.dtype),
+        interpret=(pltpu.InterpretParams()
+                   if interpret else False),
+    )
+    return fn(tile_group, lhs, rhs_p)

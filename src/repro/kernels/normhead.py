@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: fused NormHead logits (paper Eq. 4, C4).
+
+logits = x @ (W / ||W||_row)^T without ever materializing the normalized
+weight matrix in HBM: each (bt, bv, bk) tile accumulates both the partial
+dot products AND the partial squared row norms of W in VMEM scratch; the
+division happens once per output tile on the last K step.
+
+HBM traffic saved vs the unfused form: one full read + write of W
+(normalize) plus one read (matmul) collapses into a single read.  For
+Ling-Plus' 126k x 8192 head that is ~2.1 GB less HBM traffic per step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, out_ref, acc_ref, nrm_ref, *, n_k: int,
+            eps: float):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        nrm_ref[...] = jnp.zeros_like(nrm_ref)
+
+    x = x_ref[...]
+    w = w_ref[...]                       # (bv, bk)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    wf = w.astype(jnp.float32)
+    nrm_ref[...] += jnp.sum(wf * wf, axis=1, keepdims=True).T   # (1, bv)
+
+    @pl.when(k_idx == n_k - 1)
+    def _done():
+        norm = jnp.sqrt(nrm_ref[...])                           # (1, bv)
+        out_ref[...] = (acc_ref[...]
+                        / jnp.maximum(norm, eps)).astype(out_ref.dtype)
+
+
+def normhead_matmul(x: jax.Array, w: jax.Array, *, bt: int = 128,
+                    bv: int = 128, bk: int = 128, eps: float = 1e-6,
+                    interpret: bool = False) -> jax.Array:
+    """x (T, d), w (V, d) -> fp32 logits (T, V), rows of w L2-normalized."""
+    T, d = x.shape
+    V, d2 = w.shape
+    assert d == d2 and T % bt == 0 and V % bv == 0 and d % bk == 0
+    n_k = d // bk
+    fn = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k, eps=eps),
+        grid=(T // bt, V // bv, n_k),
+        in_specs=[
+            pl.BlockSpec((bt, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bv, bk), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bt, bv), lambda i, j, k: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bt, bv), jnp.float32),
+                        pltpu.VMEM((1, bv), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((T, V), jnp.float32),
+        interpret=(pltpu.InterpretParams()
+                   if interpret else False),
+    )
+    return fn(x, w)

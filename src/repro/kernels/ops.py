@@ -1,0 +1,116 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute with interpret=True (the kernel
+body runs as jnp ops, validating the tiling logic); on a real TPU the same
+call sites compile the Mosaic kernels.  `INTERPRET` flips automatically.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import grouped_matmul as _gm
+from repro.kernels import normhead as _nh
+from repro.kernels import wkv6 as _wkv
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def _align_groups(lhs, group_sizes, bm: int):
+    """Re-layout ragged rows so each group starts at a multiple of bm.
+
+    Returns (lhs_aligned (M_pad, K), tile_group (M_pad/bm,), row_map
+    (M_pad,) source row per padded row or -1)."""
+    M = lhs.shape[0]
+    G = group_sizes.shape[0]
+    padded = ((group_sizes + bm - 1) // bm) * bm          # (G,)
+    out_starts = jnp.cumsum(padded) - padded
+    in_starts = jnp.cumsum(group_sizes) - group_sizes
+    M_pad_max = int(M + G * (bm - 1))
+    M_pad_max = ((M_pad_max + bm - 1) // bm) * bm
+    rows = jnp.arange(M_pad_max)
+    gid = jnp.sum(rows[:, None] >= (out_starts + padded)[None, :], axis=1)
+    gid_c = jnp.clip(gid, 0, G - 1)
+    off = rows - jnp.take(out_starts, gid_c)
+    src = jnp.take(in_starts, gid_c) + off
+    valid = (gid < G) & (off < jnp.take(group_sizes, gid_c))
+    row_map = jnp.where(valid, src, -1)
+    lhs_pad = jnp.where(valid[:, None],
+                        jnp.take(lhs, jnp.clip(row_map, 0), axis=0), 0)
+    tile_group = jnp.where(
+        jnp.take(valid, rows[::bm]), gid_c[::bm].astype(jnp.int32),
+        jnp.int32(G))
+    return lhs_pad, tile_group, row_map
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def grouped_matmul(lhs, rhs, group_sizes, *, bm: int = 128, bk: int = 128,
+                   bn: int = 128, interpret: bool | None = None):
+    """Drop-in for jax.lax.ragged_dot: lhs (M,K) group-sorted rows,
+    rhs (G,K,N), group_sizes (G,).  Handles non-aligned groups by
+    re-laying rows out to bm-aligned group starts."""
+    interpret = INTERPRET if interpret is None else interpret
+    M, K = lhs.shape
+    G, _, N = rhs.shape
+    bm = min(bm, max(8, M))
+    bk_ = min(bk, K)
+    bn_ = min(bn, N)
+    # shrink tiles to divide the problem (kernel requires exact tiling)
+    while K % bk_:
+        bk_ //= 2
+    while N % bn_:
+        bn_ //= 2
+    lhs_pad, tile_group, row_map = _align_groups(lhs, group_sizes, bm)
+    out_pad = _gm.grouped_matmul_aligned(lhs_pad, rhs, tile_group, bm=bm,
+                                         bk=bk_, bn=bn_,
+                                         interpret=interpret)
+    # scatter rows back to the original ragged layout
+    M_pad = lhs_pad.shape[0]
+    out = jnp.zeros((M, N), out_pad.dtype)
+    ok = row_map >= 0
+    out = out.at[jnp.clip(row_map, 0)].add(
+        jnp.where(ok[:, None], out_pad, 0))
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bv", "bk", "interpret"))
+def normhead_logits(x, w, *, bt: int = 128, bv: int = 128, bk: int = 128,
+                    interpret: bool | None = None):
+    """Fused NormHead: x (T,d) @ normalize_rows(w (V,d)).T -> (T,V) fp32."""
+    interpret = INTERPRET if interpret is None else interpret
+    T, d = x.shape
+    V, _ = w.shape
+    bt_, bv_, bk_ = min(bt, T), min(bv, V), min(bk, d)
+    while T % bt_:
+        bt_ //= 2
+    while V % bv_:
+        bv_ //= 2
+    while d % bk_:
+        bk_ //= 2
+    return _nh.normhead_matmul(x, w, bt=bt_, bv=bv_, bk=bk_,
+                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, w, u, state, *, chunk: int = 256,
+         interpret: bool | None = None):
+    """RWKV6 recurrence.  r,k,v,w (B,T,H,hd); u (H,hd);
+    state (B,H,hd,hd) fp32.  Returns (y (B,T,H,hd), state')."""
+    interpret = INTERPRET if interpret is None else interpret
+    B, T, H, hd = r.shape
+    ck = min(chunk, T)
+    while T % ck:
+        ck //= 2
+
+    def flat(t):
+        return jnp.moveaxis(t, 1, 2).reshape(B * H, T, hd).astype(
+            jnp.float32)
+
+    u_f = jnp.tile(u.astype(jnp.float32), (B, 1))
+    s_f = state.reshape(B * H, hd, hd).astype(jnp.float32)
+    y, sT = _wkv.wkv6_chunked(flat(r), flat(k), flat(v), flat(w), u_f, s_f,
+                              chunk=ck, interpret=interpret)
+    y = jnp.moveaxis(y.reshape(B, H, T, hd), 2, 1).astype(r.dtype)
+    return y, sT.reshape(B, H, hd, hd)

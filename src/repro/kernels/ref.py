@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (validated via assert_allclose
+in tests/test_kernels.py across shape/dtype sweeps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_matmul_ref(lhs: jax.Array, rhs: jax.Array,
+                       group_sizes: jax.Array) -> jax.Array:
+    """lhs (M, K) rows sorted by group; rhs (G, K, N); group_sizes (G,).
+    Rows beyond sum(group_sizes) produce zeros (ragged_dot semantics)."""
+    M = lhs.shape[0]
+    G = rhs.shape[0]
+    ends = jnp.cumsum(group_sizes)
+    starts = ends - group_sizes
+    row = jnp.arange(M)
+    # group id per row; rows past the end get G (masked out)
+    gid = jnp.sum(row[:, None] >= ends[None, :], axis=1)
+    valid = row < ends[-1]
+    w = jnp.take(rhs, jnp.clip(gid, 0, G - 1), axis=0)     # (M, K, N)
+    out = jnp.einsum("mk,mkn->mn", lhs.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    return jnp.where(valid[:, None], out, 0.0).astype(lhs.dtype)
+
+
+def normhead_ref(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """x (T, d), w (V, d) -> logits (T, V) with L2-normalized rows of w
+    (paper Eq. 4), fp32 accumulation."""
+    wf = w.astype(jnp.float32)
+    norm = jnp.sqrt(jnp.sum(wf * wf, axis=-1, keepdims=True))
+    wn = wf / jnp.maximum(norm, eps)
+    return x.astype(jnp.float32) @ wn.T
+
+
+def wkv6_ref(r, k, v, w, u, state):
+    """RWKV6 recurrence oracle.  r,k,v,w (B,T,H,hd) fp32; u (H,hd);
+    state (B,H,hd,hd).  Returns (y, final_state)."""
+    def step(S, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhkv,bhk->bhv", S + u[..., None] * kv, rt)
+        S = wt[..., :, None] * S + kv
+        return S, y
+
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, inputs)
+    return jnp.moveaxis(ys, 0, 1), state

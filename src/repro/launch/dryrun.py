@@ -1,0 +1,242 @@
+"""Multi-pod dry-run (deliverable e).
+
+Lowers + compiles every (architecture x input-shape) pair against the
+production meshes — 16x16=256 chips single-pod and 2x16x16=512 chips
+multi-pod — using ShapeDtypeStruct inputs (no allocation), then records
+memory_analysis, cost_analysis, and the parsed collective schedule for the
+roofline table (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch phi3-mini-3.8b --shape train_4k
+  python -m repro.launch.dryrun --arch all [--multi-pod] [--out DIR]
+"""
+# The dry-run (and ONLY the dry-run) needs 512 placeholder devices; jax
+# locks the device count at first init, so this precedes every other import.
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse          # noqa: E402
+import gzip              # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import subprocess        # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import api, roofline           # noqa: E402
+from repro.configs.base import (ARCH_IDS, INPUT_SHAPES, get_config,
+                                supported_shapes)  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model as M       # noqa: E402
+from repro.optim import adamw              # noqa: E402
+
+ASSIGNED = [a for a in ARCH_IDS if a not in ("ling-lite", "ling-plus")]
+
+
+def to_abstract(shapes_tree, specs_tree, mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct tree."""
+    def mk(sd, spec):
+        return jax.ShapeDtypeStruct(
+            sd.shape, sd.dtype, sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(
+        mk, shapes_tree,
+        jax.tree.unflatten(jax.tree.structure(shapes_tree),
+                           jax.tree.leaves(specs_tree,
+                                           is_leaf=lambda x: isinstance(x, P))))
+
+
+def input_specs(runner: api.Runner, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    shape = INPUT_SHAPES[shape_name]
+    mesh, env, cfg = runner.mesh, runner.env, runner.cfg
+    if shape.mode == "train":
+        shapes = runner.train_batch_shapes(shape)
+        return to_abstract(shapes, runner.train_batch_specs(
+            shape.global_batch), mesh)
+    if shape.mode == "prefill":
+        shapes = {k: v for k, v in runner.train_batch_shapes(shape).items()
+                  if k != "labels"}
+        specs = {k: v for k, v in runner.train_batch_specs(
+            shape.global_batch).items() if k != "labels"}
+        return to_abstract(shapes, specs, mesh)
+    # decode: one token per sequence + position scalar
+    b = api.batch_sharding(env, shape.global_batch)
+    tok = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32,
+                               sharding=NamedSharding(mesh, P(b)))
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))
+    return {"token": tok, "pos": pos}
+
+
+def model_flops_per_chip(cfg, shape, n_chips: int) -> float:
+    n_active = cfg.active_param_count()
+    if shape.mode == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len / n_chips
+    if shape.mode == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len / n_chips
+    return 2.0 * n_active * shape.global_batch / n_chips
+
+
+def run_pair(arch: str, shape_name: str, multi_pod: bool,
+             flags: M.RunFlags = M.DEFAULT_FLAGS, *, sp_comm="native",
+             gather_cast=True, cf=None, serve_fsdp=False):
+    cfg = get_config(arch)
+    if cf is not None and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=cf))
+    shape = INPUT_SHAPES[shape_name]
+    if shape_name not in supported_shapes(cfg):
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped",
+                "reason": "long_500k requires sub-quadratic attention "
+                          "(full-attention architecture; see DESIGN.md)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+
+    if shape.mode == "train":
+        runner = api.Runner(cfg, mesh, flags=flags, fsdp=True,
+                            seq_parallel=True, max_seq=shape.seq_len,
+                            sp_comm=sp_comm, gather_cast=gather_cast)
+        step = runner.make_train_step(shape.global_batch)
+        params = runner.abstract_params()
+        opt = to_abstract(
+            jax.eval_shape(adamw.init_opt_state, runner.shapes),
+            adamw.opt_state_specs(runner.specs), mesh)
+        batch = input_specs(runner, shape_name)
+        rep = NamedSharding(mesh, P())
+        step_i = jax.ShapeDtypeStruct((), jnp.int32, sharding=rep)
+        lr = jax.ShapeDtypeStruct((), jnp.float32, sharding=rep)
+        rng = jax.ShapeDtypeStruct((2,), jnp.uint32, sharding=rep)
+        lowered = jax.jit(step).lower(params, opt, batch, step_i, rng, lr)
+    elif shape.mode == "prefill":
+        scfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+        runner = api.Runner(scfg, mesh, flags=flags, fsdp=False,
+                            seq_parallel=True, max_seq=shape.seq_len)
+        fn = runner.make_prefill(shape.global_batch)
+        params = runner.abstract_params()
+        batch = input_specs(runner, shape_name)
+        lowered = jax.jit(fn).lower(params, batch)
+    else:  # decode
+        scfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+        runner = api.Runner(scfg, mesh, flags=flags, fsdp=serve_fsdp,
+                            seq_parallel=False, max_seq=shape.seq_len)
+        fn, cache_specs = runner.make_decode_step(shape.global_batch,
+                                                  shape.seq_len)
+        params = runner.abstract_params()
+        cache_shapes, b = runner.init_cache_shapes(shape.global_batch,
+                                                   shape.seq_len)
+        caches = to_abstract(cache_shapes, cache_specs, mesh)
+        inp = input_specs(runner, shape_name)
+        lowered = jax.jit(fn).lower(params, caches, inp["token"], inp["pos"])
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_d = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+    }
+    hlo_text = compiled.as_text()
+    rl = roofline.analyze_text(
+        hlo_text, model_flops_per_chip=model_flops_per_chip(cfg, shape,
+                                                            n_chips))
+    if os.environ.get("DRYRUN_SAVE_HLO"):
+        os.makedirs("experiments/hlo", exist_ok=True)
+        tag = f"{arch}__{shape_name}__{'2x16x16' if multi_pod else '16x16'}"
+        with gzip.open(f"experiments/hlo/{tag}.hlo.gz", "wt") as f:
+            f.write(hlo_text)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok", "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": mem_d, "roofline": rl.to_dict(),
+        "flags": {**dataclasses.asdict(flags), "sp_comm": sp_comm,
+                  "gather_cast": gather_cast, "cf": cf},
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--schedule", default="causal",
+                    choices=["full", "causal", "window"])
+    ap.add_argument("--moe-dispatch", default="auto",
+                    choices=["auto", "ragged", "batched"])
+    ap.add_argument("--rwkv-chunk", type=int, default=0)
+    ap.add_argument("--sp-comm", default="native",
+                    choices=["native", "int8"])
+    ap.add_argument("--no-gather-cast", action="store_true")
+    ap.add_argument("--cf", type=float, default=None,
+                    help="override MoE capacity factor")
+    ap.add_argument("--attn-block", type=int, default=1024)
+    ap.add_argument("--serve-fsdp", action="store_true",
+                    help="shard serving params over dp too (290B-class)")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    os.makedirs(args.out, exist_ok=True)
+    flags = dataclasses.replace(M.DEFAULT_FLAGS,
+                                attn_schedule=args.schedule,
+                                moe_dispatch=args.moe_dispatch,
+                                rwkv_chunk=args.rwkv_chunk,
+                                attn_block=args.attn_block)
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+                if args.tag:
+                    tag += f"__{args.tag}"
+                path = os.path.join(args.out, tag + ".json")
+                try:
+                    rec = run_pair(arch, shape, mp, flags,
+                                   sp_comm=args.sp_comm,
+                                   gather_cast=not args.no_gather_cast,
+                                   cf=args.cf, serve_fsdp=args.serve_fsdp)
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "error", "error": repr(e)[:2000]}
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" bottleneck={r['bottleneck']}"
+                             f" compute={roofline.fmt_seconds(r['compute_s'])}"
+                             f" mem={roofline.fmt_seconds(r['memory_s'])}"
+                             f" coll={roofline.fmt_seconds(r['collective_s'])}"
+                             f" useful={r['useful_ratio']:.2f}"
+                             f" compile={rec['compile_s']}s")
+                elif status == "error":
+                    extra = " " + rec["error"][:160]
+                print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

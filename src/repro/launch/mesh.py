@@ -1,0 +1,21 @@
+"""Production mesh construction.
+
+NOTE: functions only — importing this module never touches jax device
+state.  The dry-run entrypoint sets XLA_FLAGS for 512 host devices *before*
+any jax import; everything else sees the real (single-CPU) device set.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """TPU v5e production mesh: 16x16 = 256 chips per pod; 2 pods = 512."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(dp: int = 1, tp: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over the actually-present devices (smoke tests, examples)."""
+    return jax.make_mesh((dp, tp), ("data", "model"))

@@ -1,0 +1,96 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch ling-lite --smoke \
+        --steps 200 --batch 8 --seq 256
+
+Selects the architecture config (``--arch`` over the full registry,
+``--smoke`` for the reduced same-family variant), builds the mesh over the
+available devices, and runs the full recipe: AdamW + WSD + batch-size
+warmup + spike skip/retry + XPUTimer + optional PCache checkpoints +
+optional EDiT multi-worker mode (``--edit-workers K``).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.configs.base import get_config, get_smoke_config
+from repro.core.edit import EDiTConfig, EDiTTrainer
+from repro.data.pipeline import DataPipeline, PipelineConfig
+from repro.launch.mesh import make_local_mesh
+from repro.optim import adamw
+from repro.optim.schedule import WSDSchedule
+from repro.telemetry.xputimer import XPUTimer
+from repro.training.trainer import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="ling-lite")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--dp", type=int, default=1)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--edit-workers", type=int, default=0,
+                    help=">0 runs EDiT local-SGD with K workers")
+    ap.add_argument("--report", default=None, help="write history JSON here")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = make_local_mesh(args.dp, args.tp)
+    runner = api.Runner(cfg, mesh, max_seq=args.seq)
+    pipe = DataPipeline(PipelineConfig(vocab_size=cfg.vocab_size,
+                                       seq_len=args.seq,
+                                       batch_size=args.batch))
+
+    if args.edit_workers > 0:
+        step = jax.jit(runner.make_train_step(args.batch))
+        params = runner.init_params(0)
+
+        def worker_step(w, opt, batch, i, lr):
+            if opt is None:
+                opt = adamw.init_opt_state(w)
+            jb = {k: jnp.asarray(v) for k, v in batch.items()}
+            w, opt, m = step(w, opt, jb, jnp.int32(i),
+                             jax.random.PRNGKey(i), jnp.float32(lr))
+            return w, opt, m["loss"]
+
+        edit = EDiTTrainer(params, worker_step,
+                           EDiTConfig(sync_every=4), args.edit_workers)
+        rounds = max(1, args.steps // 4)
+        for r in range(rounds):
+            batches = [[pipe.next_batch() for _ in range(4)]
+                       for _ in range(args.edit_workers)]
+            rec = edit.round(batches, lr=args.lr)
+            print(f"[edit] round={r} {rec}")
+        history = edit.history
+    else:
+        tcfg = TrainConfig(
+            n_steps=args.steps,
+            lr_schedule=WSDSchedule(max_lr=args.lr, warmup_steps=20,
+                                    total_steps=max(args.steps, 1)),
+            checkpoint_dir=args.checkpoint_dir,
+            checkpoint_every=args.checkpoint_every)
+        trainer = Trainer(runner, pipe, tcfg, timer=XPUTimer())
+        history = trainer.train()
+        print(json.dumps(trainer.timer.diagnose()["spans"], indent=1))
+
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump(history, f, indent=1)
+    print(f"final loss: {history[-1].get('loss', history[-1].get('mean_loss')):.4f}")
+
+
+if __name__ == "__main__":
+    main()

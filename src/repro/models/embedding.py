@@ -1,0 +1,94 @@
+"""Vocab-sharded embedding, LM head, and the sharded cross-entropy loss.
+
+Vocab is padded to a multiple of (tp * 128) and sharded over the tp axis.
+Embedding lookup and LM-head logits never materialize a replicated
+(T, V) tensor: each rank handles its vocab slice and the softmax statistics
+are combined with pmax/psum over tp.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import normhead
+from repro.models import layers as L
+from repro.sharding import AxisEnv, fsdp_spec, pad_to_multiple
+
+
+def padded_vocab(cfg, env: AxisEnv) -> int:
+    return pad_to_multiple(cfg.vocab_size, env.tp * 128)
+
+
+def init_embedding(key, cfg, env: AxisEnv):
+    vp = padded_vocab(cfg, env)
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    params = {"table": L.dense_init(k1, (vp, cfg.d_model), dt)}
+    specs = {"table": fsdp_spec(env, 2, 1, 0)}   # vocab over tp, d over dp
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(k2, (vp, cfg.d_model), dt)
+        specs["lm_head"] = fsdp_spec(env, 2, 1, 0)
+    return params, specs
+
+
+def embed_tokens(cfg, env: AxisEnv, params, ids: jax.Array) -> jax.Array:
+    """ids (T,) replicated over tp -> SP activations (T_sp, d) via
+    masked local lookup + reduce-scatter over tp."""
+    table = env.gather_fsdp(params["table"], 1,
+                            dtype=jnp.dtype(cfg.compute_dtype))
+    v_loc = table.shape[0]
+    r = env.tp_index()
+    local = ids - r * v_loc
+    in_range = (local >= 0) & (local < v_loc)
+    rows = jnp.take(table, jnp.clip(local, 0, v_loc - 1), axis=0)
+    partial = jnp.where(in_range[:, None], rows, 0.0)
+    partial = partial.astype(jnp.dtype(cfg.compute_dtype))
+    return env.sp_scatter(partial)
+
+
+def lm_logits(cfg, env: AxisEnv, params, x: jax.Array) -> jax.Array:
+    """x (T, d) -> vocab-local logits (T, V_loc) fp32 (NormHead per cfg)."""
+    w = params["table"] if cfg.tie_embeddings else params["lm_head"]
+    return normhead.normhead_logits(cfg, env, w, x)
+
+
+def sharded_xent(cfg, env: AxisEnv, logits_loc: jax.Array, labels: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Cross-entropy over tp-sharded vocab.  labels (T,), -1 = ignore.
+    Returns (mean loss over valid tokens globally, n_valid_local)."""
+    v_loc = logits_loc.shape[-1]
+    r = env.tp_index()
+    # mask vocab padding rows (global id >= vocab_size)
+    gid = r * v_loc + jnp.arange(v_loc)
+    logits_loc = jnp.where(gid[None, :] < cfg.vocab_size, logits_loc, -1e30)
+
+    m = env.pmax_tp(jax.lax.stop_gradient(jnp.max(logits_loc, axis=-1)))
+    se = env.psum_tp(jnp.sum(jnp.exp(logits_loc - m[:, None]), axis=-1))
+    lse = m + jnp.log(se)
+
+    local = labels - r * v_loc
+    in_range = (local >= 0) & (local < v_loc)
+    picked = jnp.take_along_axis(
+        logits_loc, jnp.clip(local, 0, v_loc - 1)[:, None], axis=-1)[:, 0]
+    correct = env.psum_tp(jnp.where(in_range, picked, 0.0))
+
+    valid = labels >= 0
+    per_tok = jnp.where(valid, lse - correct, 0.0)
+    n_valid = jnp.sum(valid.astype(jnp.float32))
+    total = env.psum_dp(jnp.sum(per_tok))
+    n_total = env.psum_dp(n_valid)
+    return total / jnp.maximum(n_total, 1.0), n_valid
+
+
+def sharded_argmax(env: AxisEnv, logits_loc: jax.Array) -> jax.Array:
+    """Greedy sampling over tp-sharded vocab.  logits (T, V_loc) -> (T,)."""
+    v_loc = logits_loc.shape[-1]
+    r = env.tp_index()
+    loc_idx = jnp.argmax(logits_loc, axis=-1)
+    loc_max = jnp.take_along_axis(logits_loc, loc_idx[:, None], axis=-1)[:, 0]
+    gmax = env.pmax_tp(loc_max)
+    cand = jnp.where(loc_max >= gmax, r * v_loc + loc_idx,
+                     jnp.iinfo(jnp.int32).max)
+    return -env.pmax_tp(-cand)   # min over tp = lowest-id global argmax

@@ -1,0 +1,580 @@
+"""Core transformer layers, written for manual sharding inside shard_map.
+
+Conventions
+-----------
+* Every forward function receives *local* shards and an `AxisEnv`.
+* Weight layout: FSDP (ZeRO-3) over the dp axes on one dim, tensor parallel
+  over `model` on another.  Forward gathers FSDP dims; autodiff turns those
+  gathers into reduce-scatters, so dp gradient reduction is automatic.
+* Sequence parallel: block boundary activations are (T_sp, d) with tokens
+  sharded over `model`; blocks gather to (T_dp, d), compute with TP, and
+  reduce-scatter partial outputs back to SP.
+* Attention: query heads padded up to a multiple of tp and column-sharded;
+  K/V projections are replicated (computed on every tp rank) because several
+  assigned architectures have fewer KV heads than tp=16.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import AxisEnv, fsdp_spec, pad_to_multiple
+
+Params = Dict[str, jax.Array]
+Specs = Dict[str, P]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def _normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def dense_init(key, shape, dtype, scale: float = 0.02):
+    return _normal(key, shape, scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg, env: AxisEnv) -> Tuple[Params, Specs]:
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    params: Params = {"scale": jnp.ones((d,), dt)}
+    specs: Specs = {"scale": fsdp_spec(env, 1, 0)}
+    if cfg.norm_type == "layernorm":
+        params["bias"] = jnp.zeros((d,), dt)
+        specs["bias"] = fsdp_spec(env, 1, 0)
+    return params, specs
+
+
+def apply_norm(cfg, env: AxisEnv, params: Params, x: jax.Array) -> jax.Array:
+    scale = env.gather_fsdp(params["scale"], 0).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        bias = env.gather_fsdp(params["bias"], 0).astype(jnp.float32)
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + 1e-5) * scale + bias
+    else:  # rmsnorm
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + 1e-6) * scale
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float):
+    """positions (...,) -> cos/sin of shape (..., head_dim/2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., S, H, hd); cos/sin (..., S, hd/2) broadcastable over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]  # broadcast over head axis
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FFN) — column/row tensor parallel
+# ---------------------------------------------------------------------------
+
+GATED_ACTS = ("swiglu", "geglu")
+
+
+def _act(name: str, x: jax.Array) -> jax.Array:
+    if name == "swiglu":
+        return jax.nn.silu(x)
+    if name == "geglu":
+        return jax.nn.gelu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "squared_relu":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(name)
+
+
+def init_mlp(key, cfg, env: AxisEnv, d_ff: Optional[int] = None,
+             scale_out: float = 0.02) -> Tuple[Params, Specs]:
+    d = cfg.d_model
+    ff = d_ff if d_ff is not None else cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {"w1": dense_init(k1, (d, ff), dt),
+              "w2": dense_init(k2, (ff, d), dt, scale_out)}
+    specs = {"w1": fsdp_spec(env, 2, 0, 1), "w2": fsdp_spec(env, 2, 1, 0)}
+    if cfg.mlp_act in GATED_ACTS:
+        params["w3"] = dense_init(k3, (d, ff), dt)
+        specs["w3"] = fsdp_spec(env, 2, 0, 1)
+    return params, specs
+
+
+def apply_mlp(cfg, env: AxisEnv, params: Params, x: jax.Array,
+              act: Optional[str] = None) -> jax.Array:
+    """x (T, d) full per dp-shard -> partial (T, d): caller combines over tp."""
+    act = act or cfg.mlp_act
+    cdt = jnp.dtype(cfg.compute_dtype)
+    w1 = env.gather_fsdp(params["w1"], 0, dtype=cdt)
+    w2 = env.gather_fsdp(params["w2"], 1, dtype=cdt)
+    h = x @ w1
+    if act in GATED_ACTS:
+        w3 = env.gather_fsdp(params["w3"], 0, dtype=cdt)
+        h = _act(act, h) * (x @ w3)
+    else:
+        h = _act(act, h)
+    return h @ w2
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    n_heads: int          # logical query heads
+    n_kv: int             # kv heads (replicated over tp)
+    heads_padded: int     # padded to multiple of tp
+    local_heads: int
+    head_dim: int
+
+    @classmethod
+    def build(cls, cfg, env: AxisEnv) -> "AttnDims":
+        hp = pad_to_multiple(cfg.n_heads, env.tp)
+        return cls(cfg.n_heads, cfg.n_kv_heads, hp, hp // env.tp,
+                   cfg.head_dim)
+
+
+def init_attention(key, cfg, env: AxisEnv, cross: bool = False
+                   ) -> Tuple[Params, Specs]:
+    ad = AttnDims.build(cfg, env)
+    d, hd = cfg.d_model, ad.head_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    out_scale = 0.02 / max(cfg.n_layers, 1) ** 0.5
+    params = {
+        "wq": dense_init(kq, (d, ad.heads_padded * hd), dt),
+        "wk": dense_init(kk, (d, ad.n_kv * hd), dt),
+        "wv": dense_init(kv, (d, ad.n_kv * hd), dt),
+        "wo": dense_init(ko, (ad.heads_padded * hd, d), dt, out_scale),
+    }
+    specs = {
+        "wq": fsdp_spec(env, 2, 0, 1),       # column: heads sharded
+        "wk": fsdp_spec(env, 2, 0, None),    # replicated over tp
+        "wv": fsdp_spec(env, 2, 0, None),
+        "wo": fsdp_spec(env, 2, 1, 0),       # row: heads sharded
+    }
+    return params, specs
+
+
+def _kv_index_for_local_heads(ad: AttnDims, env: AxisEnv) -> jax.Array:
+    """Global GQA mapping: query head g uses kv head g // (H/KV); padded
+    heads reuse the last kv head.  Returns (local_heads,) traced indices."""
+    r = env.tp_index()
+    g = r * ad.local_heads + jnp.arange(ad.local_heads)
+    group = max(ad.n_heads // ad.n_kv, 1)
+    return jnp.minimum(g // group, ad.n_kv - 1)
+
+
+def choose_block(s: int, target: int = 1024) -> int:
+    """Largest divisor of s that is <= target (block sizes must tile S)."""
+    if s <= target:
+        return s
+    best = 1
+    for b in range(1, target + 1):
+        if s % b == 0:
+            best = b
+    return best
+
+
+def _schedule_pairs(nq: int, nk: int, bq: int, bk: int, schedule: str,
+                    window: Optional[int]) -> Tuple[List[int], List[int]]:
+    """Static (q_block, k_block) pair enumeration.
+
+    'full'    all pairs (baseline; masks do the causal work, ~2x FLOP waste)
+    'causal'  lower-triangular blocks only
+    'window'  causal + within sliding-window band (linear in S)
+    """
+    qs, ks = [], []
+    for qi in range(nq):
+        for ki in range(nk):
+            if schedule in ("causal", "window") and ki * bk > (qi + 1) * bq - 1:
+                continue
+            if schedule == "window" and window is not None:
+                # k block [ki*bk, (ki+1)*bk) vs needed [qi*bq - window + 1, ..)
+                if (ki + 1) * bk - 1 < qi * bq - window + 1:
+                    continue
+            qs.append(qi)
+            ks.append(ki)
+    return qs, ks
+
+
+def _pair_mask(qi, ki, bq, bk, causal, window, q_offset):
+    qpos = qi * bq + jnp.arange(bq) + q_offset
+    kpos = ki * bk + jnp.arange(bk)
+    mask = jnp.ones((bq, bk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    return mask
+
+
+def _flash_fwd(qT, kT, vT, pairs, *, bq, bk, nq, causal, window, q_offset):
+    """Returns (out_T (B,H,Sq,hd) f32 normalized, m (nq,B,H,bq), l)."""
+    B, H, Sq, hd = qT.shape
+    scale = hd ** -0.5
+    m0 = jnp.full((nq, B, H, bq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((nq, B, H, bq), jnp.float32)
+    a0 = jnp.zeros((nq, B, H, bq, hd), jnp.float32)
+
+    def step(carry, pair):
+        m, l, acc = carry
+        qi, ki = pair
+        qb = jax.lax.dynamic_slice_in_dim(qT, qi * bq, bq, axis=2)
+        kb = jax.lax.dynamic_slice_in_dim(kT, ki * bk, bk, axis=2)
+        vb = jax.lax.dynamic_slice_in_dim(vT, ki * bk, bk, axis=2)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qb, kb,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _pair_mask(qi, ki, bq, bk, causal, window, q_offset)
+        s = jnp.where(mask, s, -jnp.inf)
+        m_old = jax.lax.dynamic_index_in_dim(m, qi, 0, keepdims=False)
+        l_old = jax.lax.dynamic_index_in_dim(l, qi, 0, keepdims=False)
+        a_old = jax.lax.dynamic_index_in_dim(acc, qi, 0, keepdims=False)
+        m_blk = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_old, m_blk)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.where(mask, jnp.exp(s - m_safe[..., None]), 0.0)
+        corr = jnp.where(jnp.isfinite(m_old), jnp.exp(m_old - m_safe), 0.0)
+        l_new = l_old * corr + jnp.sum(p, axis=-1)
+        a_new = (a_old * corr[..., None]
+                 + jnp.einsum("bhqk,bhkd->bhqd", p, vb.astype(jnp.float32)))
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, qi, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, qi, 0)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, qi, 0)
+        return (m, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), pairs)
+    out = acc / jnp.maximum(l, 1e-20)[..., None]          # (nq,B,H,bq,hd)
+    out_T = jnp.moveaxis(out, 0, 2).reshape(B, H, Sq, hd)
+    return out_T, m, l
+
+
+@functools.lru_cache(maxsize=None)
+def _flash_attention(bq: int, bk: int, nq: int, nk: int,
+                     pairs_key: Tuple[Tuple[int, ...], Tuple[int, ...]],
+                     causal: bool, window: Optional[int], q_offset: int):
+    """custom_vjp flash attention specialized to a static schedule.
+
+    Residuals are only (q, k, v, out, m, l) — the backward *recomputes* the
+    block probabilities pair by pair instead of saving O(S^2) score tensors
+    (which is what makes 32k-sequence training fit in HBM; see
+    EXPERIMENTS.md §Perf for the before/after).
+    """
+    import numpy as _np
+    # numpy (not jnp!) constants: a jnp array built during one trace would
+    # leak that trace's tracer into later traces via the lru_cache.
+    pairs = (_np.asarray(pairs_key[0], _np.int32),
+             _np.asarray(pairs_key[1], _np.int32))
+
+    @jax.custom_vjp
+    def attn(qT, kT, vT):
+        out_T, _, _ = _flash_fwd(qT, kT, vT, pairs, bq=bq, bk=bk, nq=nq,
+                                 causal=causal, window=window,
+                                 q_offset=q_offset)
+        return out_T.astype(qT.dtype)
+
+    def fwd(qT, kT, vT):
+        out_T, m, l = _flash_fwd(qT, kT, vT, pairs, bq=bq, bk=bk, nq=nq,
+                                 causal=causal, window=window,
+                                 q_offset=q_offset)
+        return out_T.astype(qT.dtype), (qT, kT, vT, out_T, m, l)
+
+    def bwd(res, g):
+        qT, kT, vT, out_T, m, l = res
+        B, H, Sq, hd = qT.shape
+        scale = hd ** -0.5
+        gf = g.astype(jnp.float32)
+        # D = rowsum(dout * out) per query
+        D = jnp.sum(gf * out_T, axis=-1)                  # (B,H,Sq)
+        l_flat = jnp.moveaxis(l, 0, 2).reshape(B, H, Sq)  # match layout
+        m_flat = jnp.moveaxis(m, 0, 2).reshape(B, H, Sq)
+
+        dq0 = jnp.zeros(qT.shape, jnp.float32)
+        dk0 = jnp.zeros(kT.shape, jnp.float32)
+        dv0 = jnp.zeros(vT.shape, jnp.float32)
+
+        def step(carry, pair):
+            dq, dk, dv = carry
+            qi, ki = pair
+            qb = jax.lax.dynamic_slice_in_dim(qT, qi * bq, bq, axis=2)
+            kb = jax.lax.dynamic_slice_in_dim(kT, ki * bk, bk, axis=2)
+            vb = jax.lax.dynamic_slice_in_dim(vT, ki * bk, bk, axis=2)
+            gb = jax.lax.dynamic_slice_in_dim(gf, qi * bq, bq, axis=2)
+            Db = jax.lax.dynamic_slice_in_dim(D, qi * bq, bq, axis=2)
+            mb = jax.lax.dynamic_slice_in_dim(m_flat, qi * bq, bq, axis=2)
+            lb = jax.lax.dynamic_slice_in_dim(l_flat, qi * bq, bq, axis=2)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _pair_mask(qi, ki, bq, bk, causal, window, q_offset)
+            m_safe = jnp.where(jnp.isfinite(mb), mb, 0.0)
+            p = jnp.where(mask, jnp.exp(s - m_safe[..., None]), 0.0)
+            p = p / jnp.maximum(lb, 1e-20)[..., None]     # normalized probs
+            dvb = jnp.einsum("bhqk,bhqd->bhkd", p, gb)
+            dp = jnp.einsum("bhqd,bhkd->bhqk", gb, vb.astype(jnp.float32))
+            ds = p * (dp - Db[..., None])
+            dqb = jnp.einsum("bhqk,bhkd->bhqd",
+                             ds, kb.astype(jnp.float32)) * scale
+            dkb = jnp.einsum("bhqk,bhqd->bhkd",
+                             ds, qb.astype(jnp.float32)) * scale
+            dq = jax.lax.dynamic_update_slice_in_dim(
+                dq, jax.lax.dynamic_slice_in_dim(dq, qi * bq, bq, 2) + dqb,
+                qi * bq, axis=2)
+            dk = jax.lax.dynamic_update_slice_in_dim(
+                dk, jax.lax.dynamic_slice_in_dim(dk, ki * bk, bk, 2) + dkb,
+                ki * bk, axis=2)
+            dv = jax.lax.dynamic_update_slice_in_dim(
+                dv, jax.lax.dynamic_slice_in_dim(dv, ki * bk, bk, 2) + dvb,
+                ki * bk, axis=2)
+            return (dq, dk, dv), None
+
+        (dq, dk, dv), _ = jax.lax.scan(step, (dq0, dk0, dv0), pairs)
+        return (dq.astype(qT.dtype), dk.astype(kT.dtype),
+                dv.astype(vT.dtype))
+
+    attn.defvjp(fwd, bwd)
+    return attn
+
+
+def attention_core(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   causal: bool, window: Optional[int],
+                   q_offset: int = 0, schedule: str = "causal",
+                   block_target: int = 1024) -> jax.Array:
+    """Blockwise (flash-structured) attention in pure JAX.
+
+    q (B, Sq, H, hd); k, v (B, Sk, H, hd)  [kv already expanded to H heads]
+    Returns (B, Sq, H, hd).  Memory is O(S * block) instead of O(S^2) in
+    BOTH directions: the custom_vjp recomputes block probabilities in the
+    backward pass, so 32k-sequence steps are lowerable.  The (q_block,
+    k_block) schedule is enumerated statically: 'causal' visits only
+    lower-triangular tiles (~2x fewer FLOPs than 'full'+masks) and 'window'
+    visits only the sliding-window band (linear in S).
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    bq = choose_block(Sq, block_target)
+    bk = choose_block(Sk, block_target)
+    nq, nk = Sq // bq, Sk // bk
+    if not causal:
+        schedule = "full"
+    qs_idx, ks_idx = _schedule_pairs(nq, nk, bq, bk, schedule,
+                                     window if schedule == "window" else None)
+    fn = _flash_attention(bq, bk, nq, nk, (tuple(qs_idx), tuple(ks_idx)),
+                          causal, window, q_offset)
+    out_T = fn(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+               jnp.swapaxes(v, 1, 2))
+    return jnp.swapaxes(out_T, 1, 2)                      # (B,Sq,H,hd)
+
+
+def apply_attention(cfg, env: AxisEnv, params: Params, x: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    kv_source: Optional[jax.Array] = None,
+                    use_rope: Optional[bool] = None,
+                    schedule: str = "causal",
+                    block_target: int = 1024,
+                    return_cache: bool = False):
+    """Training/prefill attention.
+
+    x (B, S, d) full per dp-shard (replicated over tp).  Returns partial
+    output (B, S, d) to be sp_scatter'ed by the caller, plus (optionally)
+    the tp-local slice of the KV cache for prefill.
+    """
+    ad = AttnDims.build(cfg, env)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    B, S, d = x.shape
+    kv_in = kv_source if kv_source is not None else x
+    Skv = kv_in.shape[1]
+
+    wq = env.gather_fsdp(params["wq"], 0, dtype=cdt)
+    wk = env.gather_fsdp(params["wk"], 0, dtype=cdt)
+    wv = env.gather_fsdp(params["wv"], 0, dtype=cdt)
+    wo = env.gather_fsdp(params["wo"], 1, dtype=cdt)
+
+    q = (x @ wq).reshape(B, S, ad.local_heads, ad.head_dim)
+    k = (kv_in @ wk).reshape(B, Skv, ad.n_kv, ad.head_dim)
+    v = (kv_in @ wv).reshape(B, Skv, ad.n_kv, ad.head_dim)
+
+    rope_on = cfg.use_rope if use_rope is None else use_rope
+    if rope_on:
+        cos_q, sin_q = rope_angles(jnp.arange(S), ad.head_dim, cfg.rope_theta)
+        q = apply_rope(q, cos_q, sin_q)
+        cos_k, sin_k = rope_angles(jnp.arange(Skv), ad.head_dim,
+                                   cfg.rope_theta)
+        k = apply_rope(k, cos_k, sin_k)
+
+    kv_idx = _kv_index_for_local_heads(ad, env)
+    k_sel = jnp.take(k, kv_idx, axis=2)   # (B, Skv, local_heads, hd)
+    v_sel = jnp.take(v, kv_idx, axis=2)
+
+    out = attention_core(q, k_sel, v_sel, causal=causal, window=window,
+                         schedule=schedule, block_target=block_target)
+    partial = out.reshape(B, S, ad.local_heads * ad.head_dim) @ wo
+
+    if not return_cache:
+        return partial, None
+    # prefill: emit the tp-local S-slice of the (all-kv-head) cache
+    s_loc = Skv // env.tp
+    r = env.tp_index()
+    k_slice = jax.lax.dynamic_slice_in_dim(k, r * s_loc, s_loc, axis=1)
+    v_slice = jax.lax.dynamic_slice_in_dim(v, r * s_loc, s_loc, axis=1)
+    return partial, {"k": k_slice, "v": v_slice}
+
+
+def init_decode_cache(cfg, env: AxisEnv, batch_local: int, seq_len: int,
+                      window: Optional[int] = None) -> Dict[str, jax.Array]:
+    """KV cache, S-sharded over tp.  SWA uses a rolling window-sized cache."""
+    ad = AttnDims.build(cfg, env)
+    s_total = min(window, seq_len) if window else seq_len
+    s_loc = max(s_total // env.tp, 1)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    shape = (batch_local, s_loc, ad.n_kv, ad.head_dim)
+    return {"k": jnp.zeros(shape, cdt), "v": jnp.zeros(shape, cdt)}
+
+
+def decode_attention(cfg, env: AxisEnv, params: Params, x: jax.Array,
+                     cache: Dict[str, jax.Array], pos: jax.Array, *,
+                     window: Optional[int] = None,
+                     cross: bool = False):
+    """Single-token decode with an S-sharded cache and online-softmax psum.
+
+    x (B_loc, d) replicated over tp; cache k/v (B_loc, S_loc, KV, hd).
+    Every tp rank computes *all* query heads (the per-token q vector is
+    all-gathered — tiny), attends its S-slice, and the (num, den) pair is
+    psum'ed over tp; this shards cache memory 1/tp with O(B*H*hd) traffic.
+    Returns (partial_out (B_loc, d), new_cache).
+    """
+    ad = AttnDims.build(cfg, env)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    B = x.shape[0]
+    hd = ad.head_dim
+
+    wq = env.gather_fsdp(params["wq"], 0, dtype=cdt)
+    wk = env.gather_fsdp(params["wk"], 0, dtype=cdt)
+    wv = env.gather_fsdp(params["wv"], 0, dtype=cdt)
+    wo = env.gather_fsdp(params["wo"], 1, dtype=cdt)
+
+    q_local = (x @ wq).reshape(B, ad.local_heads, hd)
+    if cfg.use_rope and not cross:
+        cos, sin = rope_angles(pos[None], hd, cfg.rope_theta)
+        q_local = apply_rope(q_local[:, None], cos[None], sin[None])[:, 0]
+    # assemble all padded heads on every rank (tiny: B x Hp x hd)
+    q_all = env.all_gather_tp(q_local, axis=1)            # (B, Hp, hd)
+
+    s_loc = cache["k"].shape[1]
+    r = env.tp_index()
+    if not cross:
+        k_new = (x @ wk).reshape(B, ad.n_kv, hd)
+        v_new = (x @ wv).reshape(B, ad.n_kv, hd)
+        if cfg.use_rope:
+            cos, sin = rope_angles(pos[None], hd, cfg.rope_theta)
+            k_new = apply_rope(k_new[:, None], cos[None], sin[None])[:, 0]
+        # rolling slot for SWA, plain slot otherwise; only the owning rank
+        # actually lands the update (masked dynamic_update_slice).
+        slot = pos % (s_loc * env.tp) if window else pos
+        local_slot = jnp.clip(slot - r * s_loc, 0, s_loc - 1)
+        owns = (slot >= r * s_loc) & (slot < (r + 1) * s_loc)
+        def upd(buf, new):
+            cur = jax.lax.dynamic_slice_in_dim(buf, local_slot, 1, axis=1)
+            new = jnp.where(owns, new[:, None], cur)
+            return jax.lax.dynamic_update_slice_in_dim(buf, new, local_slot,
+                                                       axis=1)
+        cache = {"k": upd(cache["k"], k_new.astype(cdt)),
+                 "v": upd(cache["v"], v_new.astype(cdt))}
+
+    # score all padded heads against the local S slice.  Fast path: when no
+    # head padding happened and heads group evenly onto kv heads, reshape q
+    # into (kv, group) and contract against the cache directly — no
+    # expanded/gathered KV copy ever hits HBM (big decode-bandwidth win,
+    # see EXPERIMENTS.md §Perf).
+    grouped = (ad.n_heads == ad.heads_padded
+               and ad.heads_padded % ad.n_kv == 0)
+    if grouped:
+        g = ad.heads_padded // ad.n_kv
+        q_g = q_all.reshape(B, ad.n_kv, g, hd)
+        s = jnp.einsum("bkgd,bskd->bkgs", q_g, cache["k"],
+                       preferred_element_type=jnp.float32) * hd ** -0.5
+        s = s.reshape(B, ad.heads_padded, s_loc)
+    else:
+        group = max(ad.n_heads // ad.n_kv, 1)
+        hp_kv = jnp.minimum(jnp.arange(ad.heads_padded) // group,
+                            ad.n_kv - 1)
+        k_exp = jnp.take(cache["k"], hp_kv, axis=2)       # (B,S_loc,Hp,hd)
+        s = jnp.einsum("bhd,bshd->bhs", q_all, k_exp,
+                       preferred_element_type=jnp.float32) * hd ** -0.5
+    kpos = r * s_loc + jnp.arange(s_loc)
+    if cross:
+        valid = jnp.ones((s_loc,), bool)
+    elif window:
+        # rolling cache: every written slot is within the window by
+        # construction; valid slots are those already written.
+        n_written = jnp.minimum(pos + 1, s_loc * env.tp)
+        # slots are addressed mod total; slot w is valid if w < n_written
+        valid = kpos < n_written
+    else:
+        valid = kpos <= pos
+    s = jnp.where(valid[None, None, :], s, -jnp.inf)
+
+    m_loc = jnp.max(s, axis=-1)
+    m = env.pmax_tp(m_loc)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.where(valid[None, None, :], jnp.exp(s - m_safe[..., None]), 0.0)
+    # p in compute dtype for the PV contraction (flash-kernel convention):
+    # avoids materializing an f32 copy of the cache-sized V
+    p_c = p.astype(cdt)
+    if grouped:
+        p_g = p_c.reshape(B, ad.n_kv, ad.heads_padded // ad.n_kv, s_loc)
+        num = jnp.einsum("bkgs,bskd->bkgd", p_g, cache["v"],
+                         preferred_element_type=jnp.float32)
+        num = num.reshape(B, ad.heads_padded, hd)
+    else:
+        group = max(ad.n_heads // ad.n_kv, 1)
+        hp_kv = jnp.minimum(jnp.arange(ad.heads_padded) // group,
+                            ad.n_kv - 1)
+        v_exp = jnp.take(cache["v"], hp_kv, axis=2)
+        num = jnp.einsum("bhs,bshd->bhd", p_c, v_exp,
+                         preferred_element_type=jnp.float32)
+    den = jnp.sum(p, axis=-1)
+    num, den = env.psum_tp((num, den))
+    attn = (num / jnp.maximum(den, 1e-20)[..., None]).astype(cdt)  # (B,Hp,hd)
+
+    # row-parallel output projection on the local head slice
+    lo = r * ad.local_heads
+    local = jax.lax.dynamic_slice_in_dim(attn, lo, ad.local_heads, axis=1)
+    partial = local.reshape(B, ad.local_heads * hd) @ wo
+    return partial, cache
+
+
+def expand_cache_from_prefill(prefill_cache):
+    """Prefill emits (B, S_loc, KV, hd) slices already in decode layout."""
+    return prefill_cache

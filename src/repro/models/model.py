@@ -1,0 +1,491 @@
+"""Composable model assembly: config -> init / train / prefill / decode.
+
+All forward functions are written to run *inside* shard_map (manual
+collectives via AxisEnv).  `repro.launch.dryrun` and the trainers wrap them
+with jit(shard_map(...)) using the spec trees returned by `param_specs`.
+
+Layer stacking: architectures with a uniform block pattern scan over stacked
+layer params (keeps the HLO small for 80-layer models); mixed patterns
+(recurrentgemma 2:1, whisper enc-dec) use a python loop with per-layer remat.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import moe as moe_lib
+from repro.models import embedding as emb
+from repro.models import layers as L
+from repro.models import rglru as rglru_lib
+from repro.models import rwkv6 as rwkv_lib
+from repro.sharding import AxisEnv, batch_spec, fsdp_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class RunFlags:
+    """Static knobs for perf experiments (EXPERIMENTS.md §Perf)."""
+    attn_schedule: str = "causal"      # "full" | "causal" | "window"
+    remat: bool = True
+    loss_chunk: int = 2048
+    attn_block: int = 1024
+    moe_dispatch: str = "auto"         # "ragged" | "batched" | "auto"
+    rwkv_chunk: int = 0                # >0: chunked-parallel WKV6
+
+
+DEFAULT_FLAGS = RunFlags()
+
+
+def _ffn_kind(cfg: ModelConfig, layer: int) -> str:
+    if cfg.moe is not None and layer >= cfg.moe.first_dense_layers:
+        return "moe"
+    return "mlp"
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ModelConfig, env: AxisEnv, kind: str,
+               ffn: str, cross: bool = False):
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    params["norm1"], specs["norm1"] = L.init_norm(cfg, env)
+    if kind in ("attn", "swa"):
+        params["attn"], specs["attn"] = L.init_attention(ks[0], cfg, env)
+    elif kind == "rwkv":
+        params["tmix"], specs["tmix"] = rwkv_lib.init_time_mix(ks[0], cfg, env)
+    elif kind == "rglru":
+        params["rec"], specs["rec"] = rglru_lib.init_rglru(ks[0], cfg, env)
+    else:
+        raise ValueError(kind)
+    if cross:
+        params["norm_x"], specs["norm_x"] = L.init_norm(cfg, env)
+        params["xattn"], specs["xattn"] = L.init_attention(
+            ks[1], cfg, env, cross=True)
+    params["norm2"], specs["norm2"] = L.init_norm(cfg, env)
+    if kind == "rwkv":
+        params["cmix"], specs["cmix"] = rwkv_lib.init_channel_mix(
+            ks[2], cfg, env)
+    elif ffn == "moe":
+        params["moe"], specs["moe"] = moe_lib.init_moe(ks[2], cfg, env)
+    else:
+        params["mlp"], specs["mlp"] = L.init_mlp(ks[2], cfg, env)
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# per-layer forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def block_forward(cfg: ModelConfig, env: AxisEnv, params, x_sp, *,
+                  B: int, S: int, kind: str, ffn: str,
+                  step=None, rng=None, train: bool = True,
+                  flags: RunFlags = DEFAULT_FLAGS,
+                  causal: bool = True,
+                  enc_out: Optional[jax.Array] = None,
+                  want_cache: bool = False):
+    """x_sp (T_sp, d) -> (x_sp, aux, cache_or_None)."""
+    d = cfg.d_model
+    cache = {}
+    # ---- mixer sublayer ---------------------------------------------------
+    h_sp = L.apply_norm(cfg, env, params["norm1"], x_sp)
+    h = env.sp_gather(h_sp)                       # (T, d)
+    hB = h.reshape(B, S, d)
+    if kind in ("attn", "swa"):
+        window = cfg.attn_window if kind == "swa" else None
+        sched = flags.attn_schedule
+        if kind == "swa" and sched != "full":
+            sched = "window"
+        partial, kv = L.apply_attention(
+            cfg, env, params["attn"], hB, causal=causal, window=window,
+            schedule=sched, block_target=flags.attn_block,
+            return_cache=want_cache)
+        if want_cache:
+            cache["self"] = kv
+        partial = partial.reshape(B * S, d)
+        state_out = None
+    elif kind == "rwkv":
+        partial, state_out = rwkv_lib.time_mix(cfg, env, params["tmix"], hB,
+                                               chunk=flags.rwkv_chunk)
+        partial = partial.reshape(B * S, d)
+        if want_cache:
+            cache["rwkv"] = state_out
+    elif kind == "rglru":
+        partial, state_out = rglru_lib.recurrent_block(
+            cfg, env, params["rec"], hB)
+        partial = partial.reshape(B * S, d)
+        if want_cache:
+            cache["rglru"] = state_out
+    else:
+        raise ValueError(kind)
+    x_sp = x_sp + env.sp_scatter(partial)
+
+    # ---- cross attention (whisper decoder) --------------------------------
+    if "xattn" in params:
+        h_sp = L.apply_norm(cfg, env, params["norm_x"], x_sp)
+        h = env.sp_gather(h_sp).reshape(B, S, d)
+        partial, kv = L.apply_attention(
+            cfg, env, params["xattn"], h, causal=False, kv_source=enc_out,
+            use_rope=False, schedule="full", return_cache=want_cache)
+        if want_cache:
+            cache["cross"] = kv
+        x_sp = x_sp + env.sp_scatter(partial.reshape(B * S, d))
+
+    # ---- FFN sublayer ------------------------------------------------------
+    aux = jnp.zeros((), jnp.float32)
+    metrics: Dict[str, jax.Array] = {}
+    h_sp = L.apply_norm(cfg, env, params["norm2"], x_sp)
+    h = env.sp_gather(h_sp)
+    if kind == "rwkv":
+        hB = h.reshape(B, S, d)
+        h_prev = jnp.pad(hB, ((0, 0), (1, 0), (0, 0)))[:, :-1].reshape(-1, d)
+        partial, gate = rwkv_lib.channel_mix(cfg, env, params["cmix"],
+                                             h, h_prev)
+        x_sp = x_sp + gate * env.sp_scatter(partial)
+        if want_cache:
+            cache["cmix_prev"] = hB[:, -1]
+    elif ffn == "moe":
+        partial, aux, metrics = moe_lib.moe_ffn(
+            cfg, env, params["moe"], h, step=step, rng=rng, train=train,
+            dispatch=flags.moe_dispatch)
+        x_sp = x_sp + env.sp_scatter(partial)
+    else:
+        partial = L.apply_mlp(cfg, env, params["mlp"], h)
+        x_sp = x_sp + env.sp_scatter(partial)
+    return x_sp, aux, metrics, (cache if want_cache else None)
+
+
+# ---------------------------------------------------------------------------
+# per-layer decode
+# ---------------------------------------------------------------------------
+
+
+def block_decode(cfg, env: AxisEnv, params, x, cache, pos, *, kind: str,
+                 ffn: str):
+    """x (B, d) replicated over tp; cache per-kind dict."""
+    h = L.apply_norm(cfg, env, params["norm1"], x)
+    if kind in ("attn", "swa"):
+        window = cfg.attn_window if kind == "swa" else None
+        partial, cache["self"] = L.decode_attention(
+            cfg, env, params["attn"], h, cache["self"], pos, window=window)
+    elif kind == "rwkv":
+        partial, cache["rwkv"] = rwkv_lib.time_mix_decode(
+            cfg, env, params["tmix"], h, cache["rwkv"])
+    elif kind == "rglru":
+        partial, cache["rglru"] = rglru_lib.decode_step(
+            cfg, env, params["rec"], h, cache["rglru"])
+    x = x + env.psum_tp(partial)
+
+    if "xattn" in params:
+        h = L.apply_norm(cfg, env, params["norm_x"], x)
+        partial, _ = L.decode_attention(cfg, env, params["xattn"], h,
+                                        cache["cross"], pos, cross=True)
+        x = x + env.psum_tp(partial)
+
+    h = L.apply_norm(cfg, env, params["norm2"], x)
+    if kind == "rwkv":
+        partial, gate = rwkv_lib.channel_mix(
+            cfg, env, params["cmix"], h, cache["cmix_prev"])
+        cache["cmix_prev"] = h
+        x = x + gate * env.psum_tp(partial)
+    elif ffn == "moe":
+        partial, _, _ = moe_lib.moe_ffn(cfg, env, params["moe"], h,
+                                        train=False)
+        x = x + env.psum_tp(partial)
+    else:
+        x = x + env.psum_tp(L.apply_mlp(cfg, env, params["mlp"], h))
+    return x, cache
+
+
+def init_block_cache(cfg, env: AxisEnv, kind: str, B_loc: int, seq_len: int,
+                     cross_len: int = 0):
+    cache: Dict[str, Any] = {}
+    if kind in ("attn", "swa"):
+        window = cfg.attn_window if kind == "swa" else None
+        cache["self"] = L.init_decode_cache(cfg, env, B_loc, seq_len, window)
+    elif kind == "rwkv":
+        cache["rwkv"] = rwkv_lib.init_decode_state(cfg, env, B_loc)
+        cache["cmix_prev"] = jnp.zeros((B_loc, cfg.d_model),
+                                       jnp.dtype(cfg.compute_dtype))
+    elif kind == "rglru":
+        cache["rglru"] = rglru_lib.init_decode_state(cfg, env, B_loc)
+    if cfg.is_encoder_decoder:
+        cache["cross"] = L.init_decode_cache(cfg, env, B_loc, cross_len)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# whole model
+# ---------------------------------------------------------------------------
+
+
+def init_model(key, cfg: ModelConfig, env: AxisEnv, max_seq: int):
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    params["embed"], specs["embed"] = emb.init_embedding(ks[0], cfg, env)
+    params["final_norm"], specs["final_norm"] = L.init_norm(cfg, env)
+
+    if not cfg.use_rope and not cfg.is_encoder_decoder and \
+            cfg.block_pattern != ("rwkv",):
+        pass  # all assigned no-rope decoders are rwkv (no abs pos needed)
+
+    def stacked(init_fn, n, key):
+        keys = jax.random.split(key, n)
+        p0, s0 = init_fn(keys[0])
+        ps = jax.vmap(lambda k: init_fn(k)[0])(keys)
+        ss = jax.tree.map(lambda s: P(*((None,) + tuple(s))), s0,
+                          is_leaf=lambda x: isinstance(x, P))
+        return ps, ss
+
+    if cfg.is_encoder_decoder:
+        dt = jnp.dtype(cfg.param_dtype)
+        params["pos_enc"] = L.dense_init(ks[1], (cfg.encoder_seq_len,
+                                                 cfg.d_model), dt)
+        specs["pos_enc"] = P(None, None)
+        params["pos_dec"] = L.dense_init(ks[2], (max_seq, cfg.d_model), dt)
+        specs["pos_dec"] = P(None, None)
+        params["enc_norm"], specs["enc_norm"] = L.init_norm(cfg, env)
+        enc_blocks = []
+        enc_specs = []
+        for i in range(cfg.encoder_layers):
+            p, s = init_block(jax.random.fold_in(ks[3], i), cfg, env,
+                              "attn", "mlp")
+            enc_blocks.append(p)
+            enc_specs.append(s)
+        params["enc_blocks"] = enc_blocks
+        specs["enc_blocks"] = enc_specs
+        dec_blocks, dec_specs = [], []
+        for i in range(cfg.n_layers):
+            p, s = init_block(jax.random.fold_in(ks[4], i), cfg, env,
+                              "attn", "mlp", cross=True)
+            dec_blocks.append(p)
+            dec_specs.append(s)
+        params["blocks"] = dec_blocks
+        specs["blocks"] = dec_specs
+    elif cfg.uniform_blocks:
+        kind = cfg.block_pattern[0]
+        ffn = _ffn_kind(cfg, cfg.n_layers - 1)
+        params["blocks"], specs["blocks"] = stacked(
+            lambda k: init_block(k, cfg, env, kind, ffn), cfg.n_layers, ks[3])
+    else:
+        blocks, bspecs = [], []
+        for i in range(cfg.n_layers):
+            p, s = init_block(jax.random.fold_in(ks[3], i), cfg, env,
+                              cfg.block_kind(i), _ffn_kind(cfg, i))
+            blocks.append(p)
+            bspecs.append(s)
+        params["blocks"] = blocks
+        specs["blocks"] = bspecs
+    return params, specs
+
+
+def param_specs(cfg: ModelConfig, env: AxisEnv, max_seq: int):
+    box = {}
+
+    def f(key):
+        p, s = init_model(key, cfg, env, max_seq)
+        box["s"] = s
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return box["s"], shapes
+
+
+# ---- forward (train / prefill) ---------------------------------------------
+
+
+def _run_blocks(cfg, env, params, x_sp, *, B, S, step, rng, train, flags,
+                want_cache=False, enc_out=None):
+    aux0 = jnp.zeros((), jnp.float32)
+    if cfg.uniform_blocks and not cfg.is_encoder_decoder:
+        kind = cfg.block_pattern[0]
+        ffn = _ffn_kind(cfg, cfg.n_layers - 1)
+        keys = (jax.random.split(rng, cfg.n_layers) if rng is not None
+                else jnp.zeros((cfg.n_layers, 2), jnp.uint32))
+
+        def body(carry, inp):
+            x_sp, aux = carry
+            lp, lk = inp
+            x_sp, a, metrics, cache = block_forward(
+                cfg, env, lp, x_sp, B=B, S=S, kind=kind, ffn=ffn,
+                step=step, rng=(lk if rng is not None else None),
+                train=train, flags=flags, want_cache=want_cache,
+                enc_out=enc_out)
+            return (x_sp, aux + a), (cache, metrics)
+
+        body_fn = jax.checkpoint(body) if flags.remat else body
+        (x_sp, aux), (caches, metrics) = jax.lax.scan(
+            body_fn, (x_sp, aux0), (params["blocks"], keys))
+        metrics = jax.tree.map(lambda v: jnp.mean(v, axis=0), metrics)
+        return x_sp, aux, metrics, caches
+    # loop path (mixed patterns / enc-dec)
+    aux = aux0
+    caches = []
+    metrics_all = []
+    for i, lp in enumerate(params["blocks"]):
+        kind = cfg.block_kind(i)
+        ffn = _ffn_kind(cfg, i)
+        lk = jax.random.fold_in(rng, i) if rng is not None else None
+        base_fwd = functools.partial(
+            block_forward, cfg, env, B=B, S=S, kind=kind, ffn=ffn,
+            step=step, train=train, flags=flags, want_cache=want_cache,
+            enc_out=enc_out)
+        if flags.remat:
+            x_sp, a, mets, cache = jax.checkpoint(
+                lambda p, x, k: base_fwd(p, x, rng=k))(lp, x_sp, lk)
+        else:
+            x_sp, a, mets, cache = base_fwd(lp, x_sp, rng=lk)
+        aux = aux + a
+        if mets:
+            metrics_all.append(mets)
+        caches.append(cache)
+    metrics = (jax.tree.map(lambda *v: jnp.mean(jnp.stack(v)), *metrics_all)
+               if metrics_all else {})
+    return x_sp, aux, metrics, caches
+
+
+def _encode(cfg, env, params, frames, flags):
+    """Whisper encoder over stub frame embeddings (B, S_enc, d)."""
+    B, S_enc, d = frames.shape
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = frames.astype(cdt) + params["pos_enc"].astype(cdt)[None]
+    x_sp = x.reshape(B * S_enc, d)
+    if env.seq_parallel and env.tp > 1:
+        t_sp = (B * S_enc) // env.tp
+        x_sp = jax.lax.dynamic_slice_in_dim(
+            x_sp, env.tp_index() * t_sp, t_sp, 0)
+    for i, lp in enumerate(params["enc_blocks"]):
+        x_sp, _, _, _ = block_forward(
+            cfg, env, lp, x_sp, B=B, S=S_enc, kind="attn", ffn="mlp",
+            train=False, flags=flags, causal=False)
+    x_sp = L.apply_norm(cfg, env, params["enc_norm"], x_sp)
+    return env.sp_gather(x_sp).reshape(B, S_enc, d)
+
+
+def forward(cfg: ModelConfig, env: AxisEnv, params, batch, *,
+            step=None, rng=None, train=True, flags=DEFAULT_FLAGS,
+            want_cache=False):
+    """batch['tokens'] (B_loc, S) -> (x_final (T, d) gathered, aux, caches).
+
+    Whisper additionally reads batch['enc_frames'] (B_loc, S_enc, d).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encode(cfg, env, params, batch["enc_frames"], flags)
+    x_sp = emb.embed_tokens(cfg, env, params["embed"], tokens.reshape(-1))
+    if cfg.is_encoder_decoder:
+        pos = params["pos_dec"].astype(x_sp.dtype)[:S]
+        pos_flat = jnp.tile(pos, (B, 1))
+        if env.seq_parallel and env.tp > 1:
+            t_sp = (B * S) // env.tp
+            pos_flat = jax.lax.dynamic_slice_in_dim(
+                pos_flat, env.tp_index() * t_sp, t_sp, 0)
+        x_sp = x_sp + pos_flat
+    x_sp, aux, metrics, caches = _run_blocks(
+        cfg, env, params, x_sp, B=B, S=S, step=step, rng=rng, train=train,
+        flags=flags, want_cache=want_cache, enc_out=enc_out)
+    x_sp = L.apply_norm(cfg, env, params["final_norm"], x_sp)
+    x = env.sp_gather(x_sp)                    # (T, d)
+    return x, aux, metrics, caches
+
+
+def loss_fn(cfg: ModelConfig, env: AxisEnv, params, batch, *,
+            step=None, rng=None, flags=DEFAULT_FLAGS):
+    """Training loss: chunked sharded cross entropy + MoE aux losses."""
+    x, aux, block_metrics, _ = forward(cfg, env, params, batch, step=step,
+                                       rng=rng, train=True, flags=flags)
+    labels = batch["labels"].reshape(-1)
+    T = x.shape[0]
+    chunk = L.choose_block(T, flags.loss_chunk)
+    n = T // chunk
+
+    def chunk_loss(carry, idx):
+        tot = carry
+        xc = jax.lax.dynamic_slice_in_dim(x, idx * chunk, chunk, 0)
+        lc = jax.lax.dynamic_slice_in_dim(labels, idx * chunk, chunk, 0)
+        logits = emb.lm_logits(cfg, env, params["embed"], xc)
+        # accumulate the *sum* over valid tokens (re-normalized below)
+        v_loc = logits.shape[-1]
+        r = env.tp_index()
+        gid = r * v_loc + jnp.arange(v_loc)
+        logits = jnp.where(gid[None, :] < cfg.vocab_size, logits, -1e30)
+        m = env.pmax_tp(jax.lax.stop_gradient(jnp.max(logits, axis=-1)))
+        se = env.psum_tp(jnp.sum(jnp.exp(logits - m[:, None]), axis=-1))
+        lse = m + jnp.log(se)
+        local = lc - r * v_loc
+        in_range = (local >= 0) & (local < v_loc)
+        picked = jnp.take_along_axis(
+            logits, jnp.clip(local, 0, v_loc - 1)[:, None], axis=-1)[:, 0]
+        correct = env.psum_tp(jnp.where(in_range, picked, 0.0))
+        valid = lc >= 0
+        tot = tot + jnp.sum(jnp.where(valid, lse - correct, 0.0))
+        return tot, jnp.sum(valid.astype(jnp.float32))
+
+    body = jax.checkpoint(chunk_loss) if flags.remat else chunk_loss
+    total, nvalid = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                                 jnp.arange(n))
+    n_total = env.psum_dp(jnp.sum(nvalid))
+    ce = env.psum_dp(total) / jnp.maximum(n_total, 1.0)
+    metrics = {"loss/ce": ce, "loss/aux": aux, **block_metrics}
+    return ce + aux, metrics
+
+
+# ---- decode ------------------------------------------------------------
+
+
+def init_caches(cfg: ModelConfig, env: AxisEnv, B_loc: int, seq_len: int,
+                cross_len: int = 0):
+    if cfg.uniform_blocks and not cfg.is_encoder_decoder:
+        kind = cfg.block_pattern[0]
+        c0 = init_block_cache(cfg, env, kind, B_loc, seq_len, cross_len)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), c0)
+    return [init_block_cache(cfg, env, cfg.block_kind(i), B_loc, seq_len,
+                             cross_len)
+            for i in range(cfg.n_layers)]
+
+
+def decode_step(cfg: ModelConfig, env: AxisEnv, params, caches,
+                token: jax.Array, pos: jax.Array):
+    """One greedy decode step.  token (B_loc,) -> (next (B_loc,), caches)."""
+    denv = dataclasses.replace(env, seq_parallel=False)
+    x = emb.embed_tokens(cfg, denv, params["embed"], token)   # (B, d)
+
+    if cfg.is_encoder_decoder:
+        pos_vec = jnp.take(params["pos_dec"], pos, axis=0).astype(x.dtype)
+        x = x + pos_vec[None]
+
+    if cfg.uniform_blocks and not cfg.is_encoder_decoder:
+        kind = cfg.block_pattern[0]
+        ffn = _ffn_kind(cfg, cfg.n_layers - 1)
+
+        def body(x, inp):
+            lp, cache = inp
+            x, cache = block_decode(cfg, denv, lp, x, cache, pos,
+                                    kind=kind, ffn=ffn)
+            return x, cache
+
+        x, caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    else:
+        new_caches = []
+        for i, lp in enumerate(params["blocks"]):
+            x, c = block_decode(cfg, denv, lp, x, caches[i], pos,
+                                kind=cfg.block_kind(i), ffn=_ffn_kind(cfg, i))
+            new_caches.append(c)
+        caches = new_caches
+    x = L.apply_norm(cfg, denv, params["final_norm"], x)
+    logits = emb.lm_logits(cfg, denv, params["embed"], x)
+    nxt = emb.sharded_argmax(denv, logits)
+    return nxt.astype(jnp.int32), caches

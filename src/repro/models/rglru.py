@@ -1,0 +1,175 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) [arXiv:2402.19427].
+
+Real-Gated Linear Recurrent Unit:
+    r_t = sigmoid(blockdiag(W_a) x_t + b_a)        (recurrence gate)
+    i_t = sigmoid(blockdiag(W_x) x_t + b_x)        (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t),  c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+wrapped in the Griffin recurrent block:
+    u  = W_in x           (width d_rnn = d_model)
+    u' = causal_conv1d_4(u)
+    h  = RGLRU(u')
+    y  = W_out (h * gelu(W_gate x))
+
+Sharding: channels sharded over tp; the gate projections are block-diagonal
+with N_BLOCKS=32 blocks (as in the published model), so every gate block is
+local to one rank — the recurrence needs zero collectives.  Only W_in /
+W_gate (column) and W_out (row) touch the tp axis.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding import AxisEnv, fsdp_spec
+
+N_BLOCKS = 32
+CONV_WIDTH = 4
+C_SCALE = 8.0
+
+
+def dims(cfg, env: AxisEnv):
+    dr = cfg.d_model                   # rnn width
+    assert dr % N_BLOCKS == 0 and N_BLOCKS % env.tp == 0
+    dr_loc = dr // env.tp
+    blocks_loc = N_BLOCKS // env.tp
+    return dr, dr_loc, blocks_loc, dr // N_BLOCKS
+
+
+def init_rglru(key, cfg, env: AxisEnv):
+    d = cfg.d_model
+    dr, _, _, bd = dims(cfg, env)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    out_scale = 0.02 / max(cfg.n_layers, 1) ** 0.5
+    params = {
+        "w_in": L.dense_init(ks[0], (d, dr), dt),
+        "w_gate": L.dense_init(ks[1], (d, dr), dt),
+        "w_out": L.dense_init(ks[2], (dr, d), dt, out_scale),
+        "conv_w": L.dense_init(ks[3], (CONV_WIDTH, dr), dt, 0.1),
+        "conv_b": jnp.zeros((dr,), dt),
+        # block-diagonal gate projections: (N_BLOCKS, bd, bd)
+        "wa": L.dense_init(ks[4], (N_BLOCKS, bd, bd), dt),
+        "wx": L.dense_init(ks[5], (N_BLOCKS, bd, bd), dt),
+        "ba": jnp.zeros((dr,), dt),
+        "bx": jnp.zeros((dr,), dt),
+        # Lambda parametrized so a^c starts in (0.9, 0.999)
+        "lam": jnp.linspace(2.0, 5.0, dr).astype(dt),
+    }
+    tpa = env.tp_axis
+    specs = {
+        "w_in": fsdp_spec(env, 2, 0, 1),
+        "w_gate": fsdp_spec(env, 2, 0, 1),
+        "w_out": fsdp_spec(env, 2, 1, 0),
+        "conv_w": fsdp_spec(env, 2, None, 1),
+        "conv_b": fsdp_spec(env, 1, None, 0),
+        # block-diag gates are small (N_BLOCKS x bd x bd): tp-sharded on
+        # the block dim only (bd need not divide the dp axis size)
+        "wa": fsdp_spec(env, 3, None, 0),
+        "wx": fsdp_spec(env, 3, None, 0),
+        "ba": fsdp_spec(env, 1, None, 0),
+        "bx": fsdp_spec(env, 1, None, 0),
+        "lam": fsdp_spec(env, 1, None, 0),
+    }
+    return params, specs
+
+
+def _gates(cfg, env, params, u):
+    """u (..., dr_loc) -> (a_gate_logit, x_gate_logit) via block-diag proj."""
+    _, dr_loc, blk_loc, bd = dims(cfg, env)
+    cdt = u.dtype
+    wa = params["wa"].astype(cdt)          # (blk_loc, bd, bd) tp-local
+    wx = params["wx"].astype(cdt)
+    ba = params["ba"].astype(cdt)          # tp-sharded, local
+    bx = params["bx"].astype(cdt)
+    ub = u.reshape(u.shape[:-1] + (blk_loc, bd))
+    ga = jnp.einsum("...nb,nbc->...nc", ub, wa).reshape(u.shape) + ba
+    gx = jnp.einsum("...nb,nbc->...nc", ub, wx).reshape(u.shape) + bx
+    return ga, gx
+
+
+def _log_a(params, env, r):
+    lam = params["lam"].astype(jnp.float32)  # tp-sharded, local
+    return -C_SCALE * jax.nn.softplus(lam) * r
+
+
+def causal_conv(params, env, u, state: Optional[jax.Array] = None):
+    """Per-channel causal conv, width 4.  u (B, S, dr_loc)."""
+    w = params["conv_w"].astype(u.dtype)   # tp-sharded dim1, local
+    b = params["conv_b"].astype(u.dtype)
+    if state is None:
+        pad = jnp.zeros(u.shape[:1] + (CONV_WIDTH - 1,) + u.shape[2:], u.dtype)
+    else:
+        pad = state
+    up = jnp.concatenate([pad, u], axis=1)
+    out = sum(w[j] * up[:, j:j + u.shape[1]] for j in range(CONV_WIDTH)) + b
+    new_state = up[:, -(CONV_WIDTH - 1):]
+    return out, new_state
+
+
+def rglru_scan(a_log, gx, u, h0):
+    """Reference linear recurrence.  a_log (B,S,dr) log decay; u inputs."""
+    x_in = jax.nn.sigmoid(gx) * u
+    a = jnp.exp(a_log)
+    scaled = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * x_in
+
+    def step(h, inp):
+        at, xt = inp
+        h = at * h + xt
+        return h, h
+
+    inputs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(scaled, 1, 0))
+    h_last, hs = jax.lax.scan(step, h0, inputs)
+    return jnp.moveaxis(hs, 0, 1), h_last
+
+
+def recurrent_block(cfg, env: AxisEnv, params, x: jax.Array,
+                    state: Optional[Dict] = None):
+    """Train/prefill.  x (B, S, d) full per dp-shard ->
+    (partial (B,S,d), state)."""
+    B, S, d = x.shape
+    cdt = jnp.dtype(cfg.compute_dtype)
+    w_in = env.gather_fsdp(params["w_in"], 0, dtype=cdt)
+    w_gate = env.gather_fsdp(params["w_gate"], 0, dtype=cdt)
+    w_out = env.gather_fsdp(params["w_out"], 1, dtype=cdt)
+
+    u = x @ w_in                                        # (B,S,dr_loc)
+    conv_state = state["conv"] if state else None
+    u, conv_state = causal_conv(params, env, u, conv_state)
+    ga, gx = _gates(cfg, env, params, u)
+    a_log = _log_a(params, env, jax.nn.sigmoid(ga.astype(jnp.float32)))
+    h0 = state["h"] if state else jnp.zeros((B, u.shape[-1]), jnp.float32)
+    h, h_last = rglru_scan(a_log, gx.astype(jnp.float32),
+                           u.astype(jnp.float32), h0)
+    y = h.astype(cdt) * jax.nn.gelu(x @ w_gate)
+    partial = y @ w_out
+    return partial, {"h": h_last, "conv": conv_state}
+
+
+def decode_step(cfg, env: AxisEnv, params, x: jax.Array, state: Dict):
+    """x (B, d) one token; state {'h': (B,dr_loc), 'conv': (B,3,dr_loc)}."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    w_in = env.gather_fsdp(params["w_in"], 0, dtype=cdt)
+    w_gate = env.gather_fsdp(params["w_gate"], 0, dtype=cdt)
+    w_out = env.gather_fsdp(params["w_out"], 1, dtype=cdt)
+    u = (x @ w_in)[:, None]                             # (B,1,dr_loc)
+    u, conv_state = causal_conv(params, env, u, state["conv"])
+    u = u[:, 0]
+    ga, gx = _gates(cfg, env, params, u)
+    a_log = _log_a(params, env, jax.nn.sigmoid(ga.astype(jnp.float32)))
+    a = jnp.exp(a_log)
+    x_in = jax.nn.sigmoid(gx.astype(jnp.float32)) * u.astype(jnp.float32)
+    h = a * state["h"] + jnp.sqrt(jnp.maximum(1 - a * a, 1e-12)) * x_in
+    y = h.astype(cdt) * jax.nn.gelu(x @ w_gate)
+    return y @ w_out, {"h": h, "conv": conv_state}
+
+
+def init_decode_state(cfg, env: AxisEnv, batch_local: int):
+    _, dr_loc, _, _ = dims(cfg, env)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    return {"h": jnp.zeros((batch_local, dr_loc), jnp.float32),
+            "conv": jnp.zeros((batch_local, CONV_WIDTH - 1, dr_loc), cdt)}

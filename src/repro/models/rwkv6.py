@@ -1,0 +1,264 @@
+"""RWKV6 ("Finch") time-mix + channel-mix blocks [arXiv:2404.05892].
+
+Attention-free linear-recurrence block with *data-dependent decay* — the
+distinguishing RWKV6 feature: the per-channel decay w_t is produced from the
+token itself through a low-rank (LoRA) projection.
+
+Sharding: heads are column-sharded over tp (padded to a multiple of tp, like
+attention); the WKV state (hd x hd per head) is head-local, so the recurrence
+needs no collectives — only the output projection is row-parallel.  The
+sequential scan here is the reference; `kernels/wkv6.py` holds the chunked
+Pallas TPU kernel.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding import AxisEnv, fsdp_spec, pad_to_multiple
+
+LORA_RANK = 32
+
+
+def dims(cfg, env: AxisEnv):
+    hd = cfg.rwkv_head_dim
+    nh = cfg.d_model // hd
+    nh_pad = pad_to_multiple(nh, env.tp)
+    return nh, nh_pad, nh_pad // env.tp, hd
+
+
+def init_time_mix(key, cfg, env: AxisEnv):
+    d = cfg.d_model
+    nh, nh_pad, nh_loc, hd = dims(cfg, env)
+    dp = nh_pad * hd                      # padded projection width
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 10)
+    out_scale = 0.02 / max(cfg.n_layers, 1) ** 0.5
+    params = {
+        # token-shift interpolation coefficients (static part of ddlerp)
+        "mu": 0.5 * jnp.ones((5, d), dt),            # r,k,v,w,g
+        "wr": L.dense_init(ks[0], (d, dp), dt),
+        "wk": L.dense_init(ks[1], (d, dp), dt),
+        "wv": L.dense_init(ks[2], (d, dp), dt),
+        "wg": L.dense_init(ks[3], (d, dp), dt),
+        "wo": L.dense_init(ks[4], (dp, d), dt, out_scale),
+        # data-dependent decay LoRA: w_t = exp(-exp(w0 + tanh(x A) B))
+        "w_lora_a": L.dense_init(ks[5], (d, LORA_RANK), dt),
+        "w_lora_b": L.dense_init(ks[6], (LORA_RANK, dp), dt),
+        "w0": -6.0 * jnp.ones((dp,), dt),
+        "u": L.dense_init(ks[7], (dp,), dt, 0.5),    # bonus ("faaaa")
+    }
+    specs = {
+        "mu": fsdp_spec(env, 2, 1),
+        "wr": fsdp_spec(env, 2, 0, 1), "wk": fsdp_spec(env, 2, 0, 1),
+        "wv": fsdp_spec(env, 2, 0, 1), "wg": fsdp_spec(env, 2, 0, 1),
+        "wo": fsdp_spec(env, 2, 1, 0),
+        "w_lora_a": fsdp_spec(env, 2, 0),
+        "w_lora_b": fsdp_spec(env, 2, 0, 1),
+        "w0": fsdp_spec(env, 1, None, 0),
+        "u": fsdp_spec(env, 1, None, 0),
+    }
+    return params, specs
+
+
+def wkv6_scan(r, k, v, w, u, state):
+    """Reference WKV6 recurrence (the Pallas kernel oracle).
+
+    r,k,v,w: (B, T, H, hd) — w in (0,1) per key-channel decay.
+    u: (H, hd) bonus.  state: (B, H, hd, hd) carried KV matrix.
+    Returns (y (B,T,H,hd), state').
+      y_t = (S_{t-1} + diag(u*k_t) . v_t^T)^T r_t
+      S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    def step(S, inp):
+        rt, kt, vt, wt = inp              # (B,H,hd) each
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,hd,hd)
+        y = jnp.einsum("bhkv,bhk->bhv", S + u[..., None] * kv, rt)
+        S = wt[..., :, None] * S + kv
+        return S, y
+
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, inputs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def _projections(cfg, env, params, x, x_prev):
+    """Shared by train and decode: token-shift mix + r,k,v,w,g projections.
+
+    x (..., d); x_prev same shape (previous token's activations).
+    """
+    _, _, nh_loc, hd = dims(cfg, env)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    mu = env.gather_fsdp(params["mu"], 1, dtype=cdt)
+    dx = x_prev - x
+    xr, xk, xv, xw, xg = (x + dx * mu[i] for i in range(5))
+
+    def proj(name, inp):
+        w = env.gather_fsdp(params[name], 0, dtype=cdt)
+        out = inp @ w
+        return out.reshape(out.shape[:-1] + (nh_loc, hd))
+
+    r = proj("wr", xr)
+    k = proj("wk", xk)
+    v = proj("wv", xv)
+    g = proj("wg", xg)
+    # data-dependent decay (LoRA), fp32 for the exp-exp
+    la = env.gather_fsdp(params["w_lora_a"], 0).astype(jnp.float32)
+    lb = env.gather_fsdp(params["w_lora_b"], 0).astype(jnp.float32)
+    w0 = params["w0"].astype(jnp.float32)   # tp-sharded, local
+    dec = w0 + jnp.tanh(xw.astype(jnp.float32) @ la) @ lb
+    w = jnp.exp(-jnp.exp(dec)).reshape(dec.shape[:-1] + (nh_loc, hd))
+    u = params["u"].astype(jnp.float32).reshape(nh_loc, hd)  # tp-local
+    return r, k, v, w, g, u
+
+
+def wkv6_chunked(r, k, v, w, u, state, chunk: int):
+    """Chunked-parallel WKV6: the TPU-shaped formulation of the recurrence
+    (the jnp twin of kernels/wkv6.py's blocking strategy).
+
+    Within a chunk of length L the per-channel decay products are
+    prefix-cumulated in log space; the sequential dependency collapses to
+    one (L x hd)@(hd x hd) state contraction + one masked (L x L) intra-
+    chunk matmul per head — the elementwise T-step scan becomes T/L matmul
+    steps, cutting the per-step HBM round-trips of the carried state by
+    the chunk length (EXPERIMENTS.md §Perf, rwkv6 train_4k).
+
+      Dc[t]   = prod_{s<=t} w_s              (exclusive of nothing)
+      inter   = (r_t ⊙ Dc[t-1]) @ S_prev
+      P[t,s]  = sum_k r_tk (Dc[t-1]/Dc[s])_k k_sk      (s < t, strictly)
+      bonus   = diag: r_t ⊙ u ⊙ k_t
+      y_t     = inter + sum_{s<t} P[t,s] v_s + (r_t·(u k_t)) v_t
+      S_next  = Dc[L-1] ⊙ S_prev + sum_s (Dc[L-1]/Dc[s] ⊙ k_s) v_s^T
+    """
+    B, T, H, hd = r.shape
+    L = chunk
+    n = T // L
+    rr = r.reshape(B, n, L, H, hd)
+    kk = k.reshape(B, n, L, H, hd)
+    vv = v.reshape(B, n, L, H, hd)
+    lw = jnp.log(jnp.maximum(w, 1e-30)).reshape(B, n, L, H, hd)
+
+    def chunk_step(S, inp):
+        rc, kc, vc, lwc = inp                    # (B, L, H, hd)
+        cum = jnp.cumsum(lwc, axis=1)            # log Dc[t]
+        dc_prev = jnp.exp(cum - lwc)             # Dc[t-1] = Dc[t]/w_t
+        dc_tot = jnp.exp(cum[:, -1])             # (B, H, hd)
+        r_d = rc * dc_prev                       # exp(<=0): bounded
+        inter = jnp.einsum("blhk,bhkv->blhv", r_d, S)
+        # midpoint-shifted pair for the intra-chunk matmul: exp(cum-shift)
+        # stays within exp(+-range/2) instead of exp(range) (f32 safety)
+        shift = cum[:, L // 2][:, None]
+        r_s = rc * jnp.exp(cum - lwc - shift)
+        k_s = kc * jnp.exp(shift - cum)
+        P = jnp.einsum("blhk,bmhk->bhlm", r_s, k_s)
+        mask = jnp.tril(jnp.ones((L, L)), -1)    # strictly lower
+        intra = jnp.einsum("bhlm,bmhv->blhv", P * mask, vc)
+        bonus = jnp.einsum("blhk,blhk->blh", rc, u[None, None] * kc)
+        y = inter + intra + bonus[..., None] * vc
+        k_tail = kc * jnp.exp(cum[:, -1:] - cum)  # Dc[L-1]/Dc[s] ⊙ k_s
+        S = dc_tot[..., None] * S + jnp.einsum("blhk,blhv->bhkv", k_tail, vc)
+        return S, y
+
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (rr, kk, vv, lw))
+    state, ys = jax.lax.scan(chunk_step, state, inputs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, H, hd)
+    return y, state
+
+
+def time_mix(cfg, env: AxisEnv, params, x: jax.Array,
+             state: Optional[Dict] = None, chunk: int = 0):
+    """Train/prefill forward.  x (B, S, d) full per dp-shard.
+    Returns (partial (B,S,d) to sp_scatter, final_state).
+    chunk > 0 selects the chunked-parallel WKV form."""
+    B, S, d = x.shape
+    _, _, nh_loc, hd = dims(cfg, env)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, w, g, u = _projections(cfg, env, params, x, x_prev)
+    S0 = jnp.zeros((B, nh_loc, hd, hd), jnp.float32)
+    if chunk and S % chunk == 0 and S > chunk:
+        y, S1 = wkv6_chunked(r.astype(jnp.float32), k.astype(jnp.float32),
+                             v.astype(jnp.float32), w, u, S0, chunk)
+    else:
+        y, S1 = wkv6_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                          v.astype(jnp.float32), w, u, S0)
+    y = (y.astype(cdt) * jax.nn.silu(g)).reshape(B, S, nh_loc * hd)
+    wo = env.gather_fsdp(params["wo"], 1, dtype=cdt)
+    out_state = {"wkv": S1, "last_x": x[:, -1]}
+    return y @ wo, out_state
+
+
+def time_mix_decode(cfg, env: AxisEnv, params, x: jax.Array, state: Dict):
+    """x (B, d) one token.  state: {'wkv': (B,H,hd,hd), 'last_x': (B,d)}."""
+    _, _, nh_loc, hd = dims(cfg, env)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    r, k, v, w, g, u = _projections(cfg, env, params, x, state["last_x"])
+    S = state["wkv"]
+    kt, vt, rt = (t.astype(jnp.float32) for t in (k, v, r))
+    kv = kt[..., :, None] * vt[..., None, :]
+    y = jnp.einsum("bhkv,bhk->bhv", S + u[..., None] * kv, rt)
+    S = w[..., :, None] * S + kv
+    y = (y.astype(cdt) * jax.nn.silu(g)).reshape(x.shape[0], nh_loc * hd)
+    wo = env.gather_fsdp(params["wo"], 1, dtype=cdt)
+    return y @ wo, {"wkv": S, "last_x": x}
+
+
+def init_decode_state(cfg, env: AxisEnv, batch_local: int):
+    _, _, nh_loc, hd = dims(cfg, env)
+    return {"wkv": jnp.zeros((batch_local, nh_loc, hd, hd), jnp.float32),
+            "last_x": jnp.zeros((batch_local, cfg.d_model),
+                                jnp.dtype(cfg.compute_dtype))}
+
+
+# ---------------------------------------------------------------------------
+# channel mix
+# ---------------------------------------------------------------------------
+
+
+def init_channel_mix(key, cfg, env: AxisEnv):
+    d, ff = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    out_scale = 0.02 / max(cfg.n_layers, 1) ** 0.5
+    params = {
+        "mu": 0.5 * jnp.ones((2, d), dt),       # k, r mixes
+        "wk": L.dense_init(k1, (d, ff), dt),
+        "wv": L.dense_init(k2, (ff, d), dt, out_scale),
+        "wr": L.dense_init(k3, (d, d), dt),
+    }
+    specs = {"mu": fsdp_spec(env, 2, 1),
+             "wk": fsdp_spec(env, 2, 0, 1),
+             "wv": fsdp_spec(env, 2, 1, 0),
+             "wr": fsdp_spec(env, 2, 0, None)}
+    return params, specs
+
+
+def channel_mix(cfg, env: AxisEnv, params, x: jax.Array,
+                x_prev: jax.Array):
+    """out = sigmoid(Wr xr) * (Wv relu(Wk xk)^2).
+
+    x, x_prev: (T, d) flat tokens (full per dp-shard).  The receptance gate
+    is applied by the caller *after* the tp combine (elementwise gating
+    commutes with the partial sum over ranks), so the gate is computed only
+    for this rank's SP token slice — no duplicated (d x d) matmul.
+    Returns (partial_kv (T, d), gate (T_sp, d)).
+    """
+    cdt = jnp.dtype(cfg.compute_dtype)
+    T = x.shape[0]
+    mu = env.gather_fsdp(params["mu"], 1, dtype=cdt)
+    dx = x_prev - x
+    xk = x + dx * mu[0]
+    xr = x + dx * mu[1]
+    wk = env.gather_fsdp(params["wk"], 0, dtype=cdt)
+    wv = env.gather_fsdp(params["wv"], 1, dtype=cdt)
+    wr = env.gather_fsdp(params["wr"], 0, dtype=cdt)
+    h = jax.nn.relu(xk @ wk)
+    partial = (h * h) @ wv
+    if env.seq_parallel and env.tp > 1:
+        t_sp = T // env.tp
+        xr = jax.lax.dynamic_slice_in_dim(xr, env.tp_index() * t_sp, t_sp, 0)
+    gate = jax.nn.sigmoid(xr @ wr)
+    return partial, gate

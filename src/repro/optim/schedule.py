@@ -1,0 +1,63 @@
+"""Learning-rate and batch-size schedules (paper §3.4, C13).
+
+* WSD (warmup–stable–decay): linear warmup over the first `warmup_steps`
+  (paper: 2K) to `max_lr` (paper: 2.4e-4); held stable; halved once ~60% of
+  the training tokens are consumed (§3.4.1).
+* Annealing: inverse-square-root decay from 1.2e-4 to 1.2e-8 (§3.4.3).
+* Batch-size warmup: 2,560 -> 8,960 sequences, grown stepwise (§3.4.1).
+* Spike response: the trainer multiplies the LR by `spike_lr_factor` for
+  steps where a persistent loss spike was detected (§3.4.4).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class WSDSchedule:
+    max_lr: float = 2.4e-4
+    warmup_steps: int = 2_000
+    halve_frac: float = 0.6          # halve LR at 60% of total tokens
+    total_steps: int = 100_000
+
+    def __call__(self, step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = self.max_lr * jnp.minimum(step / max(self.warmup_steps, 1), 1.0)
+        halved = jnp.where(step >= self.halve_frac * self.total_steps,
+                           0.5, 1.0)
+        return warm * halved
+
+
+@dataclasses.dataclass(frozen=True)
+class InvSqrtAnnealing:
+    """§3.4.3: anneal from lr_start to lr_end with inverse-sqrt decay."""
+    lr_start: float = 1.2e-4
+    lr_end: float = 1.2e-8
+    steps: int = 10_000
+
+    def __call__(self, step):
+        step = jnp.asarray(step, jnp.float32)
+        # lr(t) = lr_start / sqrt(1 + a*t) with a chosen to land on lr_end
+        a = ((self.lr_start / self.lr_end) ** 2 - 1.0) / max(self.steps, 1)
+        lr = self.lr_start / jnp.sqrt(1.0 + a * step)
+        return jnp.maximum(lr, self.lr_end)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchSizeWarmup:
+    """§3.4.1: batch size grows 2,560 -> 8,960 sequences stepwise."""
+    start: int = 2_560
+    end: int = 8_960
+    warmup_steps: int = 5_000
+    increments: int = 8
+
+    def __call__(self, step: int) -> int:
+        if step >= self.warmup_steps:
+            return self.end
+        frac = step / max(self.warmup_steps, 1)
+        stage = int(frac * self.increments)
+        size = self.start + (self.end - self.start) * stage // self.increments
+        # round to a multiple of the starting batch for sharding friendliness
+        return max(self.start, (size // 256) * 256)

@@ -1,0 +1,392 @@
+"""Three-term roofline model from compiled dry-run artifacts (deliverable g).
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOPs
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = collective_bytes_per_chip / link_bw
+
+Hardware constants (TPU v5e target): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.  `compiled.as_text()` describes the per-device SPMD
+program, so per-chip quantities over per-chip rates are equivalent to the
+brief's global/(chips*rate) formulation.
+
+Why we parse the HLO ourselves instead of trusting cost_analysis():
+XLA's HloCostAnalysis visits `while` bodies ONCE, but our layer stacks are
+`scan`s — an 80-layer model would under-report FLOPs and collective bytes
+80x.  The compiled HLO carries `known_trip_count` in each while op's
+backend_config; we build the computation call graph (while bodies weighted
+by trip count, calls/fusions by 1), propagate execution-count multipliers
+from the entry, and then:
+
+  * FLOPs      = sum over dot/convolution ops of 2*prod(out)*K * multiplier
+  * HBM bytes  = sum over non-fused instructions of (operands+result) bytes
+                 * multiplier   (fusion bodies excluded: their intermediates
+                 live in registers/VMEM, not HBM)
+  * collective = sum of operand bytes of all-gather / all-reduce /
+                 reduce-scatter / all-to-all / collective-permute
+                 * multiplier
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+
+
+def _shapes_in(s: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims = m.groups()
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _nbytes(shapes: Sequence[Tuple[str, List[int]]]) -> float:
+    total = 0.0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    lines: List[str]
+    fused: bool = False      # body of a fusion/wrapped op (no HBM traffic)
+
+
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->\s*(.+)\{\s*$")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\S+)\s+([\w\-]+)\(")
+
+
+def _parse_module(hlo: str):
+    comps: Dict[str, _Comp] = {}
+    entry = None
+    cur: Optional[_Comp] = None
+    defs: Dict[str, Tuple[str, List[int]]] = {}
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        m = _HEADER_RE.match(line)
+        if m:
+            is_entry, name, args, _ = m.groups()
+            cur = _Comp(name, [])
+            comps[name] = cur
+            if is_entry:
+                entry = name
+            # computation parameters define shapes too
+            for pm in re.finditer(r"%?([\w\.\-]+)\s*:\s*([^,)]+)", args):
+                sh = _shapes_in(pm.group(2))
+                if sh:
+                    defs[pm.group(1)] = sh[0]
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None or not line:
+            continue
+        cur.lines.append(line)
+        dm = _DEF_RE.match(line)
+        if dm:
+            name, tstr, _op = dm.groups()
+            sh = _shapes_in(tstr)
+            if len(sh) == 1:
+                defs[name] = sh[0]
+    return comps, defs, entry
+
+
+def _call_edges(comp: _Comp):
+    """[(callee, weight, via_fusion)] for one computation."""
+    edges = []
+    for ln in comp.lines:
+        if " while(" in ln or ln.startswith("while("):
+            tc = 1
+            m = re.search(r'known_trip_count[^\d]*(\d+)', ln)
+            if m:
+                tc = int(m.group(1))
+            mb = re.search(r"body=%?([\w\.\-]+)", ln)
+            mc = re.search(r"condition=%?([\w\.\-]+)", ln)
+            if mb:
+                edges.append((mb.group(1), float(tc), False))
+            if mc:
+                edges.append((mc.group(1), float(tc), False))
+            continue
+        is_fusion = " fusion(" in ln
+        for m in re.finditer(r"(?:calls=|to_apply=|body=|condition=|"
+                             r"true_computation=|false_computation=)"
+                             r"%?([\w\.\-]+)", ln):
+            edges.append((m.group(1), 1.0, is_fusion))
+        m = re.search(r"branch_computations=\{([^}]*)\}", ln)
+        if m:
+            for name in re.findall(r"%?([\w\.\-]+)", m.group(1)):
+                edges.append((name, 1.0, False))
+    return edges
+
+
+def _multipliers(comps: Dict[str, _Comp], entry: str):
+    mult: Dict[str, float] = {name: 0.0 for name in comps}
+    if entry not in comps:
+        entry = next(iter(comps))
+    mult[entry] = 1.0
+    # topological propagation: call graphs are acyclic; iterate to fixpoint
+    # over a BFS-ish frontier (small graphs, a few passes suffice)
+    edges = {name: _call_edges(c) for name, c in comps.items()}
+    order = list(comps)
+    for _ in range(len(comps)):
+        changed = False
+        new = {name: 0.0 for name in comps}
+        new[entry] = 1.0
+        for name in order:
+            w = mult.get(name, 0.0)
+            if w == 0.0:
+                continue
+            for callee, weight, via_fusion in edges[name]:
+                if callee in new:
+                    new[callee] += w * weight
+        if new != mult:
+            mult = new
+            changed = True
+        if not changed:
+            break
+        # mark fusion bodies
+    fused = set()
+    for name, es in edges.items():
+        for callee, _, via_fusion in es:
+            if via_fusion and callee in comps:
+                fused.add(callee)
+    return mult, fused
+
+
+_LAYOUT_TOKENS = {"convert", "copy", "transpose", "bitcast", "reshape",
+                  "broadcast", "slice", "dynamic", "update", "wrapped",
+                  "fusion", "pad", "concatenate"}
+
+
+def _layout_only_fusion(name: str) -> bool:
+    """True if a fusion's name indicates pure dtype/layout movement."""
+    toks = re.split(r"[_.]", name)
+    return all(t in _LAYOUT_TOKENS or t.isdigit() or t == ""
+               for t in toks)
+
+
+_DOT_LINE = re.compile(
+    r"=\s*(\w+)\[([\d,]*)\][^=]*?\b(dot|convolution)\(([^)]*)\)")
+
+
+def _dot_flops(line: str, defs) -> float:
+    m = _DOT_LINE.search(line)
+    if not m:
+        return 0.0
+    dt, dims_s, kind, args = m.groups()
+    out = 1
+    for d in dims_s.split(","):
+        if d:
+            out *= int(d)
+    if kind == "convolution":
+        # small (rglru width-4 conv); approximate K from window string
+        mw = re.search(r"window=\{size=([\dx]+)", line)
+        k = 1
+        if mw:
+            for d in mw.group(1).split("x"):
+                k *= int(d)
+        return 2.0 * out * k
+    # contraction size from lhs operand shape + contracting dims
+    lhs_dims: Optional[List[int]] = None
+    inline = _shapes_in(args)
+    if inline:
+        lhs_dims = inline[0][1]
+    else:
+        first = re.match(r"\s*%?([\w\.\-]+)", args)
+        if first and first.group(1) in defs:
+            lhs_dims = defs[first.group(1)][1]
+    k = 1
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    if lhs_dims and mc:
+        for i in (int(x) for x in mc.group(1).split(",") if x):
+            if i < len(lhs_dims):
+                k *= lhs_dims[i]
+    elif lhs_dims:
+        k = lhs_dims[-1]
+    return 2.0 * out * k
+
+
+def _line_bytes(line: str, defs) -> float:
+    """result + operand bytes for a top-level instruction."""
+    m = _DEF_RE.match(line)
+    if not m:
+        return 0.0
+    name, tstr, op = m.groups()
+    if op in ("parameter", "constant", "tuple", "get-tuple-element",
+              "bitcast", "copy-start", "copy-done", "after-all"):
+        return 0.0
+    args = re.search(rf"{op}\((.*?)\)(?:,|$)", line)
+
+    def operand_bytes():
+        if not args:
+            return []
+        inline = _shapes_in(args.group(1))
+        if inline:
+            return [_nbytes([s]) for s in inline]
+        out = []
+        for ref in re.findall(r"%([\w\.\-]+)", args.group(1)):
+            if ref in defs:
+                out.append(_nbytes([defs[ref]]))
+        return out
+
+    if op == "dynamic-update-slice":
+        # in-place on TPU/XLA: traffic = read+write of the update slice only
+        ops = operand_bytes()
+        return 2.0 * (ops[1] if len(ops) > 1 else 0.0)
+    if op == "fusion" and "dynamic-update-slice" in name:
+        # DUS-rooted fusion: the big carried buffer aliases in place;
+        # traffic = 2x the non-carried (small) operands
+        ops = operand_bytes()
+        if ops:
+            return 2.0 * (sum(ops) - max(ops))
+    if op in ("convert", "copy", "transpose", "reshape", "broadcast") or \
+            (op == "fusion" and _layout_only_fusion(name)):
+        # CPU-backend artifacts: XLA:CPU lowers bf16 dots by materializing
+        # f32 converts (and hoists them out of loops); on the TPU target
+        # these are in-flight dtype/layout changes fused into consumers.
+        # Excluded from the TPU memory model (see module docstring).
+        return 0.0
+    if op in ("dynamic-slice", "slice"):
+        return 2.0 * _nbytes(_shapes_in(tstr))   # read slice + write result
+    total = _nbytes(_shapes_in(tstr)) + sum(operand_bytes())
+    return total
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per chip
+    hbm_bytes: float             # per chip
+    collective_bytes: float      # per chip, operand sizes (brief's metric)
+    link_bytes: float            # per chip, ring-traffic model (for time)
+    compute_s: float
+    memory_s: float
+    collective_s: float          # link_bytes / LINK_BW
+    bottleneck: str
+    model_flops: float           # 6*N_active*D useful flops per chip
+    useful_ratio: float          # model_flops / hlo_flops
+    collectives: Dict[str, float]
+    collective_counts: Dict[str, int]
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def _group_size(line: str, default: int = 16) -> int:
+    """Participants per group from the replica_groups attribute."""
+    m = re.search(r"replica_groups=\{\{([\d,\s]*)\}", line)
+    if m:
+        return max(len([x for x in m.group(1).split(",") if x.strip()]), 1)
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]", line)
+    if m:
+        return max(int(m.group(2)), 1)
+    return default
+
+
+def _ring_traffic(kind: str, operand_bytes: float, g: int) -> float:
+    """Per-device ICI send volume under a ring/bidirectional model."""
+    if g <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return operand_bytes * (g - 1)          # shard sent (g-1) times
+    if kind == "reduce-scatter":
+        return operand_bytes * (g - 1) / g
+    if kind == "all-reduce":
+        return 2.0 * operand_bytes * (g - 1) / g
+    if kind == "all-to-all":
+        return operand_bytes * (g - 1) / g
+    return operand_bytes                         # collective-permute
+
+
+def analyze_text(hlo: str, *, model_flops_per_chip: float = 0.0) -> Roofline:
+    comps, defs, entry = _parse_module(hlo)
+    mult, fused = _multipliers(comps, entry)
+
+    flops = 0.0
+    hbm = 0.0
+    coll_bytes: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    link_bytes: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    coll_counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for name, comp in comps.items():
+        w = mult.get(name, 0.0)
+        if w == 0.0:
+            continue
+        in_fusion = name in fused
+        for ln in comp.lines:
+            f = _dot_flops(ln, defs)
+            if f:
+                flops += f * w
+            if not in_fusion:
+                hbm += _line_bytes(ln, defs) * w
+            for kind in _COLLECTIVES:
+                if re.search(rf"\b{kind}(?:-start)?\(", ln):
+                    if f"{kind}-done" in ln:
+                        continue
+                    args = re.search(rf"{kind}(?:-start)?\((.*?)\)(?:,|$)",
+                                     ln)
+                    b = 0.0
+                    if args:
+                        inline = _shapes_in(args.group(1))
+                        if inline:
+                            b = _nbytes(inline)
+                        else:
+                            for ref in re.findall(r"%([\w\.\-]+)",
+                                                  args.group(1)):
+                                if ref in defs:
+                                    b += _nbytes([defs[ref]])
+                    g = _group_size(ln)
+                    coll_bytes[kind] += b * w
+                    link_bytes[kind] += _ring_traffic(kind, b, g) * w
+                    coll_counts[kind] += 1
+                    break
+
+    total_coll = sum(coll_bytes.values())
+    total_link = sum(link_bytes.values())
+    cs = flops / PEAK_FLOPS
+    ms = hbm / HBM_BW
+    ls = total_link / LINK_BW
+    bn = max((("compute", cs), ("memory", ms), ("collective", ls)),
+             key=lambda kv: kv[1])[0]
+    return Roofline(
+        flops=flops, hbm_bytes=hbm, collective_bytes=total_coll,
+        link_bytes=total_link,
+        compute_s=cs, memory_s=ms, collective_s=ls, bottleneck=bn,
+        model_flops=model_flops_per_chip,
+        useful_ratio=(model_flops_per_chip / flops) if flops else 0.0,
+        collectives={k: v for k, v in link_bytes.items() if v},
+        collective_counts={k: v for k, v in coll_counts.items() if v})
+
+
+def analyze(compiled, *, model_flops_per_chip: float) -> Roofline:
+    """Build the three-term roofline from a compiled executable."""
+    return analyze_text(compiled.as_text(),
+                        model_flops_per_chip=model_flops_per_chip)
+
+
+def fmt_seconds(s: float) -> str:
+    if s >= 1:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s*1e3:.2f}ms"
+    return f"{s*1e6:.1f}us"

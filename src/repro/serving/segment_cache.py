@@ -1,0 +1,225 @@
+"""Segment KV cache (paper §2.4, C12) — Flood's memory manager.
+
+Instead of vLLM-style small block tables, the KV cache is one contiguous
+tensor [max_token_num, ...] carved into *segments*: each request gets a
+contiguous range sized conservatively; on overflow the allocator
+
+  1. **extends** the segment if the next range is free,
+  2. **appends** an additional segment to the request's segment list,
+  3. **waits** (request parked on a wait-list) if neither is possible.
+
+Contiguous segments admit large effective block sizes (better accelerator
+utilization than scattered small blocks) and give **prefix caching** for
+free: a shared prompt prefix is just a refcounted segment list prefix.
+
+This allocator is pure host logic over index ranges; the tensor itself
+lives in the model's decode cache.  Unit + hypothesis property tests
+assert: no two live segments overlap, free list is coalesced, waiters make
+progress as segments free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class Segment:
+    start: int
+    length: int
+    refcount: int = 1
+
+    @property
+    def end(self) -> int:
+        return self.start + self.length
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt_len: int
+    max_new: int
+    segments: List[Segment] = dataclasses.field(default_factory=list)
+    used: int = 0                      # tokens written so far
+    prefix_key: Optional[str] = None   # shared-prefix cache key
+
+    @property
+    def capacity(self) -> int:
+        return sum(s.length for s in self.segments)
+
+    def slot(self, token_idx: int) -> int:
+        """Global cache row for this request's token_idx."""
+        off = token_idx
+        for s in self.segments:
+            if off < s.length:
+                return s.start + off
+            off -= s.length
+        raise IndexError(token_idx)
+
+
+class SegmentCache:
+    def __init__(self, max_tokens: int, initial_segment: int = 256,
+                 extend_chunk: int = 256):
+        self.max_tokens = max_tokens
+        self.initial = initial_segment
+        self.chunk = extend_chunk
+        self.free: List[Tuple[int, int]] = [(0, max_tokens)]  # (start, len)
+        self.requests: Dict[int, Request] = {}
+        self.wait_list: Deque[int] = deque()
+        self.prefix_index: Dict[str, List[Segment]] = {}
+        self.stats = {"extends": 0, "appends": 0, "waits": 0,
+                      "prefix_hits": 0}
+
+    # -- free-list helpers --------------------------------------------------
+    def _alloc_range(self, length: int) -> Optional[Tuple[int, int]]:
+        for i, (start, flen) in enumerate(self.free):
+            if flen >= length:
+                if flen == length:
+                    self.free.pop(i)
+                else:
+                    self.free[i] = (start + length, flen - length)
+                return (start, length)
+        return None
+
+    def _release_range(self, start: int, length: int):
+        self.free.append((start, length))
+        self.free.sort()
+        merged: List[Tuple[int, int]] = []
+        for s, l in self.free:
+            if merged and merged[-1][0] + merged[-1][1] == s:
+                merged[-1] = (merged[-1][0], merged[-1][1] + l)
+            else:
+                merged.append((s, l))
+        self.free = merged
+
+    def _range_free_at(self, start: int, length: int) -> bool:
+        for s, l in self.free:
+            if s <= start and start + length <= s + l:
+                return True
+        return False
+
+    # -- admission -----------------------------------------------------------
+    def admit(self, rid: int, prompt_len: int, max_new: int,
+              prefix_key: Optional[str] = None,
+              conservative: bool = True) -> bool:
+        """Allocate an initial segment.  With `conservative` (the paper's
+        strategy for huge user-specified max_output_len), the first segment
+        covers the prompt plus a modest chunk rather than prompt+max_new."""
+        req = Request(rid, prompt_len, max_new, prefix_key=prefix_key)
+        need = prompt_len
+        if prefix_key and prefix_key in self.prefix_index:
+            # prefix cache hit: share the refcounted prefix segments
+            shared = self.prefix_index[prefix_key]
+            for s in shared:
+                s.refcount += 1
+            req.segments.extend(shared)
+            req.used = sum(s.length for s in shared)
+            need = max(prompt_len - req.used, 0)
+            self.stats["prefix_hits"] += 1
+        grow = self.initial if conservative else max_new
+        rng = self._alloc_range(need + grow)
+        if rng is None:
+            self.stats["waits"] += 1
+            self.wait_list.append(rid)
+            return False
+        req.segments.append(Segment(*rng))
+        self.requests[rid] = req
+        return True
+
+    def register_prefix(self, rid: int, key: str, upto_segment: int = 1):
+        req = self.requests[rid]
+        shared = req.segments[:upto_segment]
+        for s in shared:
+            s.refcount += 1
+        self.prefix_index[key] = shared
+
+    # -- token append ----------------------------------------------------------
+    def ensure_capacity(self, rid: int, n_tokens: int) -> bool:
+        """Grow the request to hold n_tokens; extend > append > wait."""
+        req = self.requests[rid]
+        while req.capacity < n_tokens:
+            last = req.segments[-1]
+            # 1. extend in place if the adjacent range is free
+            if last.refcount == 1 and self._range_free_at(last.end,
+                                                          self.chunk):
+                # carve the adjacent chunk out of the free list
+                for i, (s, l) in enumerate(self.free):
+                    if s <= last.end < s + l:
+                        before = last.end - s
+                        after = l - before - self.chunk
+                        repl = []
+                        if before:
+                            repl.append((s, before))
+                        if after:
+                            repl.append((last.end + self.chunk, after))
+                        self.free[i:i + 1] = repl
+                        break
+                last.length += self.chunk
+                self.stats["extends"] += 1
+                continue
+            # 2. append a new segment anywhere
+            rng = self._alloc_range(self.chunk)
+            if rng is not None:
+                req.segments.append(Segment(*rng))
+                self.stats["appends"] += 1
+                continue
+            # 3. wait
+            self.stats["waits"] += 1
+            self.wait_list.append(rid)
+            return False
+        return True
+
+    def write_token(self, rid: int) -> Optional[int]:
+        """Reserve the next cache row; None if the request must wait."""
+        req = self.requests[rid]
+        if not self.ensure_capacity(rid, req.used + 1):
+            return None
+        slot = req.slot(req.used)
+        req.used += 1
+        return slot
+
+    # -- release -------------------------------------------------------------
+    def release(self, rid: int) -> List[int]:
+        """Free a finished request; returns rids revived from the wait
+        list."""
+        req = self.requests.pop(rid)
+        for s in req.segments:
+            s.refcount -= 1
+            if s.refcount == 0:
+                self._release_range(s.start, s.length)
+        revived = []
+        still_waiting: Deque[int] = deque()
+        while self.wait_list:
+            w = self.wait_list.popleft()
+            if w in self.requests:
+                revived.append(w)       # parked mid-generation
+            else:
+                still_waiting.append(w)
+        self.wait_list = still_waiting
+        return revived
+
+    # -- invariants (used by property tests) -----------------------------------
+    def live_ranges(self) -> List[Tuple[int, int]]:
+        seen = {}
+        out = []
+        for req in self.requests.values():
+            for s in req.segments:
+                if id(s) not in seen:
+                    seen[id(s)] = True
+                    out.append((s.start, s.length))
+        return sorted(out)
+
+    def check_invariants(self):
+        ranges = self.live_ranges() + sorted(self.free)
+        ranges.sort()
+        pos = 0
+        total = 0
+        for s, l in ranges:
+            assert s >= pos, f"overlap at {s} (pos={pos})"
+            pos = s + l
+            total += l
+        assert pos <= self.max_tokens
+        # free list coalesced
+        for (s1, l1), (s2, _) in zip(self.free, self.free[1:]):
+            assert s1 + l1 < s2, "free list not coalesced"

@@ -1,0 +1,100 @@
+"""End-to-end trainer wiring the paper's training recipe together:
+
+  model (Runner) + AdamW + WSD schedule + batch-size warmup
+  + loss-spike skip & sample-retry (C6) + XPUTimer tracing (C9)
+  + PCache checkpointing (C10).
+
+The spike response is exactly §3.4.4: on a detected spike the update is
+discarded (params/opt not committed), the batch goes to the retry queue for
+random re-injection, and a persistent (wide) spike additionally halves the
+LR for a window of steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import api
+from repro.core.spikes import SpikeConfig, SpikeDetector
+from repro.data.pipeline import DataPipeline, PipelineConfig
+from repro.optim import adamw
+from repro.optim.schedule import WSDSchedule
+from repro.telemetry.xputimer import XPUTimer
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    n_steps: int = 100
+    lr_schedule: WSDSchedule = dataclasses.field(
+        default_factory=lambda: WSDSchedule(max_lr=1e-3, warmup_steps=20,
+                                            total_steps=1000))
+    opt: adamw.AdamWConfig = dataclasses.field(
+        default_factory=adamw.AdamWConfig)
+    spike: SpikeConfig = dataclasses.field(default_factory=SpikeConfig)
+    log_every: int = 10
+    checkpoint_every: int = 0          # 0 = off
+    checkpoint_dir: Optional[str] = None
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, runner: api.Runner, pipeline: DataPipeline,
+                 cfg: TrainConfig, timer: Optional[XPUTimer] = None):
+        self.runner = runner
+        self.pipeline = pipeline
+        self.cfg = cfg
+        self.timer = timer or XPUTimer()
+        self.detector = SpikeDetector(cfg.spike)
+        self.step_fn = jax.jit(
+            runner.make_train_step(pipeline.cfg.batch_size, cfg.opt))
+        self.params = runner.init_params(cfg.seed)
+        self.opt_state = adamw.init_opt_state(self.params)
+        self.rng = jax.random.PRNGKey(cfg.seed)
+        self.history: List[Dict[str, float]] = []
+        self.pcache = None
+        if cfg.checkpoint_dir:
+            from repro.checkpoint.pcache import PCache
+            self.pcache = PCache(cfg.checkpoint_dir)
+
+    def train(self, n_steps: Optional[int] = None) -> List[Dict[str, float]]:
+        n = n_steps or self.cfg.n_steps
+        for i in range(n):
+            with self.timer.span("data"):
+                batch = self.pipeline.next_batch()
+                jbatch = {k: jnp.asarray(v) for k, v in batch.items()}
+            lr = float(self.cfg.lr_schedule(i))
+            # spike-driven LR reduction applies before the step
+            lr *= self.detector.cfg.lr_reduce_factor \
+                if i <= self.detector.lr_reduced_until else 1.0
+            with self.timer.span("step"):
+                new_params, new_opt, metrics = self.step_fn(
+                    self.params, self.opt_state, jbatch, jnp.int32(i),
+                    jax.random.fold_in(self.rng, i), jnp.float32(lr))
+                loss = float(metrics["loss"])
+            with self.timer.span("spike_check"):
+                verdict = self.detector.observe(i, loss, batch=batch)
+            if verdict["skip"]:
+                # §3.4.4: skip the update, re-inject the data later
+                self.pipeline.push_retry(batch)
+                self.timer.count("spike_skipped")
+            else:
+                self.params, self.opt_state = new_params, new_opt
+            rec = {"step": i, "loss": loss, "lr": lr,
+                   "skipped": bool(verdict["skip"]),
+                   **{k: float(v) for k, v in metrics.items()
+                      if k != "loss"}}
+            self.history.append(rec)
+            if self.cfg.log_every and i % self.cfg.log_every == 0:
+                print(f"[train] step={i} loss={loss:.4f} lr={lr:.2e}"
+                      f"{' SKIP' if verdict['skip'] else ''}", flush=True)
+            if (self.pcache and self.cfg.checkpoint_every
+                    and i and i % self.cfg.checkpoint_every == 0):
+                with self.timer.span("checkpoint"):
+                    self.pcache.save(f"step_{i}", {
+                        "params": self.params, "opt": self.opt_state})
+        return self.history

@@ -1,0 +1,143 @@
+"""Core paper-technique tests: router (warmup/balance), MoE (dropless
+semantics vs dense oracle), NormHead stability properties."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import get_smoke_config
+from repro.core import moe as moe_lib
+from repro.core import router as router_lib
+from repro.core.normhead import normalize_rows
+from util import smap_env
+
+
+@pytest.fixture(scope="module")
+def moe_cfg():
+    return get_smoke_config("deepseek-moe-16b")
+
+
+def _router_params(cfg, env):
+    p, _ = router_lib.init_router(jax.random.PRNGKey(0), cfg, env)
+    return p
+
+
+def test_stochastic_warmup_balances_early_routing(moe_cfg):
+    """At step 0 warmup noise dominates -> near-uniform expert load even
+    with an adversarially skewed router; by step >> W the learned (skewed)
+    routing wins.  This is Eq. (3)'s whole point."""
+    cfg = moe_cfg
+    E = cfg.moe.n_experts
+
+    def fn(env, x, step, rng):
+        params = _router_params(cfg, env)
+        # adversarial: consistent mean-shift toward expert 0 (x >= 0 below)
+        params = {"wr": params["wr"].at[:, 0].add(0.1)}
+        top_w, top_i, aux, m = router_lib.route(cfg, env, params, x,
+                                                step=step, rng=rng,
+                                                train=True)
+        hits = jax.nn.one_hot(top_i, E).sum(axis=(0, 1))
+        return hits / hits.sum()
+
+    call, _ = smap_env(fn)
+    x = jnp.asarray(np.abs(np.random.RandomState(0).randn(512, cfg.d_model)),
+                    jnp.float32)
+    early = call(x, jnp.int32(0), jax.random.PRNGKey(1))
+    late = call(x, jnp.int32(10_000), jax.random.PRNGKey(1))
+    # k=2 of 4 experts: uniform hit share is 0.25
+    assert float(early.max()) < 0.35, early
+    # learned routing always puts expert 0 in the top-2 -> share ~0.5
+    assert float(late[0]) > 0.45, late
+
+
+def test_balance_loss_uniform_is_minimal(moe_cfg):
+    """The Switch balance loss is minimized (=1) by uniform routing."""
+    cfg = moe_cfg
+
+    def fn(env, x):
+        params = _router_params(cfg, env)
+        _, _, _, m = router_lib.route(cfg, env, params, x, train=False)
+        return m["router/balance_loss"]
+
+    call, _ = smap_env(fn)
+    x = jnp.asarray(np.random.RandomState(1).randn(2048, cfg.d_model) * 0.01,
+                    jnp.float32)
+    near_uniform = float(call(x))
+    assert near_uniform == pytest.approx(1.0, rel=0.15)
+
+
+def test_moe_matches_dense_oracle(moe_cfg):
+    """tp=1 MoE (dropless ragged path) == explicit dense top-k mixture."""
+    cfg = moe_cfg
+    m = cfg.moe
+
+    def fn(env, x):
+        params, _ = moe_lib.init_moe(jax.random.PRNGKey(3), cfg, env)
+        y, aux, _ = moe_lib.moe_ffn(cfg, env, params, x, train=False)
+
+        # oracle: run every expert densely, combine with top-k gates
+        wr = params["router"]["wr"].astype(jnp.float32)
+        probs = jax.nn.softmax(x.astype(jnp.float32) @ wr, axis=-1)
+        top_w, top_i = jax.lax.top_k(probs, m.top_k)
+        w1 = params["we1"].astype(jnp.bfloat16)
+        w2 = params["we2"].astype(jnp.bfloat16)
+        w3 = params["we3"].astype(jnp.bfloat16)
+        xb = x.astype(jnp.bfloat16)
+        outs = []
+        for e in range(m.n_experts):
+            h = jax.nn.silu(xb @ w1[e]) * (xb @ w3[e])
+            outs.append(h @ w2[e])
+        dense = jnp.stack(outs, axis=1)                  # (T, E, d)
+        gate = jnp.zeros(probs.shape).at[
+            jnp.arange(x.shape[0])[:, None], top_i].add(top_w)
+        want = jnp.einsum("ted,te->td", dense.astype(jnp.float32), gate)
+        if m.n_shared_experts:
+            from repro.models import layers as L
+            want = want + L.apply_mlp(cfg, env, params["shared"],
+                                      xb).astype(jnp.float32)
+        return y.astype(jnp.float32), want
+
+    call, _ = smap_env(fn, out_specs=(P(), P()))
+    x = jnp.asarray(np.random.RandomState(2).randn(64, cfg.d_model) * 0.3,
+                    jnp.float32)
+    got, want = call(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0.08, atol=0.08)   # bf16 compute
+
+
+def test_moe_dropless_at_tp1(moe_cfg):
+    """tp=1: capacity == T*k, so dropped_frac must be exactly 0."""
+    cfg = moe_cfg
+
+    def fn(env, x):
+        params, _ = moe_lib.init_moe(jax.random.PRNGKey(4), cfg, env)
+        _, _, metrics = moe_lib.moe_ffn(cfg, env, params, x, train=False)
+        return metrics["moe/dropped_frac"]
+
+    call, _ = smap_env(fn)
+    x = jnp.asarray(np.random.RandomState(3).randn(128, cfg.d_model),
+                    jnp.float32)
+    assert float(call(x)) == 0.0
+
+
+def test_normhead_scale_invariance():
+    w = jnp.asarray(np.random.RandomState(5).randn(16, 8), jnp.float32)
+    wn = normalize_rows(w)
+    wn2 = normalize_rows(w * 123.0)
+    np.testing.assert_allclose(np.asarray(wn), np.asarray(wn2), rtol=1e-5)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(wn), axis=1), 1.0,
+                               rtol=1e-5)
+
+
+def test_normhead_bounds_logits():
+    """With unit-norm rows, |logit| <= ||x|| — weight growth cannot blow up
+    the softmax (the §3.2.3 stability argument)."""
+    rs = np.random.RandomState(6)
+    x = jnp.asarray(rs.randn(32, 64), jnp.float32)
+    w = jnp.asarray(rs.randn(100, 64) * 50.0, jnp.float32)  # huge weights
+    logits = x @ normalize_rows(w).T
+    xnorm = jnp.linalg.norm(x, axis=1, keepdims=True)
+    assert bool(jnp.all(jnp.abs(logits) <= xnorm * 1.0001))

@@ -1,0 +1,133 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose vs the
+pure-jnp oracles in repro/kernels/ref.py (interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# grouped_matmul
+# ---------------------------------------------------------------------------
+
+GM_CASES = [
+    # (M, K, N, group_sizes, dtype)
+    (64, 32, 48, [16, 32, 16], jnp.float32),
+    (128, 64, 64, [0, 100, 28], jnp.float32),
+    (96, 16, 32, [96], jnp.float32),
+    (256, 128, 128, [7, 120, 1, 100, 28], jnp.float32),
+    (64, 32, 32, [10, 20, 30], jnp.bfloat16),
+    (200, 64, 96, [50, 0, 0, 150], jnp.float32),   # empty groups
+]
+
+
+@pytest.mark.parametrize("M,K,N,gs,dtype", GM_CASES)
+def test_grouped_matmul(M, K, N, gs, dtype):
+    rs = np.random.RandomState(0)
+    G = len(gs)
+    lhs = jnp.asarray(rs.randn(M, K), dtype)
+    rhs = jnp.asarray(rs.randn(G, K, N) * 0.1, dtype)
+    sizes = jnp.asarray(gs, jnp.int32)
+    got = ops.grouped_matmul(lhs, rhs, sizes, bm=32, interpret=True)
+    want = ref.grouped_matmul_ref(lhs, rhs, sizes)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_grouped_matmul_vs_ragged_dot():
+    rs = np.random.RandomState(1)
+    lhs = jnp.asarray(rs.randn(128, 64), jnp.float32)
+    rhs = jnp.asarray(rs.randn(4, 64, 32) * 0.1, jnp.float32)
+    sizes = jnp.asarray([30, 50, 8, 40], jnp.int32)
+    got = ops.grouped_matmul(lhs, rhs, sizes, bm=32, interpret=True)
+    want = jax.lax.ragged_dot(lhs, rhs, sizes)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# normhead
+# ---------------------------------------------------------------------------
+
+NH_CASES = [
+    (64, 128, 256, jnp.float32),
+    (32, 64, 96, jnp.float32),
+    (128, 256, 512, jnp.bfloat16),
+    (16, 32, 64, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("T,d,V,dtype", NH_CASES)
+def test_normhead(T, d, V, dtype):
+    rs = np.random.RandomState(2)
+    x = jnp.asarray(rs.randn(T, d), dtype)
+    w = jnp.asarray(rs.randn(V, d), dtype)
+    got = ops.normhead_logits(x, w, bt=16, bv=32, bk=32, interpret=True)
+    want = ref.normhead_ref(x, w)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_normhead_rows_unit_norm_effect():
+    """Scaling a row of W must not change its logits (Eq. 4 property)."""
+    rs = np.random.RandomState(3)
+    x = jnp.asarray(rs.randn(8, 64), jnp.float32)
+    w = jnp.asarray(rs.randn(32, 64), jnp.float32)
+    w2 = w.at[5].multiply(37.0)
+    a = ops.normhead_logits(x, w, interpret=True)
+    b = ops.normhead_logits(x, w2, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# wkv6
+# ---------------------------------------------------------------------------
+
+WKV_CASES = [
+    (1, 32, 2, 16, 16),
+    (2, 64, 3, 32, 32),
+    (2, 128, 2, 64, 64),
+    (1, 48, 1, 64, 16),   # chunk not dividing T -> shrinks
+]
+
+
+@pytest.mark.parametrize("B,T,H,hd,chunk", WKV_CASES)
+def test_wkv6(B, T, H, hd, chunk):
+    rs = np.random.RandomState(4)
+    r = jnp.asarray(rs.randn(B, T, H, hd), jnp.float32)
+    k = jnp.asarray(rs.randn(B, T, H, hd) * 0.3, jnp.float32)
+    v = jnp.asarray(rs.randn(B, T, H, hd) * 0.3, jnp.float32)
+    w = jnp.asarray(rs.uniform(0.6, 0.99, (B, T, H, hd)), jnp.float32)
+    u = jnp.asarray(rs.randn(H, hd) * 0.2, jnp.float32)
+    s0 = jnp.asarray(rs.randn(B, H, hd, hd) * 0.1, jnp.float32)
+    y, sT = ops.wkv6(r, k, v, w, u, s0, chunk=chunk, interpret=True)
+    y_ref, sT_ref = ref.wkv6_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(sT_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_wkv6_matches_model_scan():
+    """The model's wkv6_scan and the kernel agree (same oracle)."""
+    from repro.models.rwkv6 import wkv6_scan
+    rs = np.random.RandomState(5)
+    B, T, H, hd = 2, 32, 2, 16
+    r = jnp.asarray(rs.randn(B, T, H, hd), jnp.float32)
+    k = jnp.asarray(rs.randn(B, T, H, hd) * 0.3, jnp.float32)
+    v = jnp.asarray(rs.randn(B, T, H, hd) * 0.3, jnp.float32)
+    w = jnp.asarray(rs.uniform(0.6, 0.99, (B, T, H, hd)), jnp.float32)
+    u = jnp.asarray(rs.randn(H, hd) * 0.2, jnp.float32)
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    y1, s1 = wkv6_scan(r, k, v, w, u, s0)
+    y2, s2 = ops.wkv6(r, k, v, w, u, s0, chunk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-4,
+                               atol=2e-4)

@@ -1,0 +1,109 @@
+"""Tests for the §Perf optimizations: chunked-parallel WKV6, batched MoE
+dispatch, int8 SP communication, bf16 FSDP gathers."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import get_smoke_config
+from repro.core import moe as moe_lib
+from repro.launch.mesh import make_local_mesh
+from repro.models import model as M
+from repro.models.rwkv6 import wkv6_chunked, wkv6_scan
+from repro.sharding import _quant_rows
+from repro import api
+from util import smap_env
+
+
+@pytest.mark.parametrize("chunk,wlo", [(32, 0.9), (64, 0.5), (16, 0.2)])
+def test_wkv6_chunked_matches_scan(chunk, wlo):
+    rs = np.random.RandomState(0)
+    B, T, H, hd = 2, 128, 2, 16
+    r = jnp.asarray(rs.randn(B, T, H, hd), jnp.float32)
+    k = jnp.asarray(rs.randn(B, T, H, hd) * 0.3, jnp.float32)
+    v = jnp.asarray(rs.randn(B, T, H, hd) * 0.3, jnp.float32)
+    w = jnp.asarray(rs.uniform(wlo, 0.999, (B, T, H, hd)), jnp.float32)
+    u = jnp.asarray(rs.randn(H, hd) * 0.2, jnp.float32)
+    s0 = jnp.asarray(rs.randn(B, H, hd, hd) * 0.1, jnp.float32)
+    y1, s1 = wkv6_scan(r, k, v, w, u, s0)
+    y2, s2 = wkv6_chunked(r, k, v, w, u, s0, chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_wkv6_chunked_grads():
+    rs = np.random.RandomState(1)
+    B, T, H, hd = 1, 64, 1, 8
+    args = [jnp.asarray(rs.randn(B, T, H, hd) * 0.3, jnp.float32)
+            for _ in range(3)]
+    w = jnp.asarray(rs.uniform(0.6, 0.99, (B, T, H, hd)), jnp.float32)
+    u = jnp.asarray(rs.randn(H, hd) * 0.2, jnp.float32)
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    g1 = jax.grad(lambda *a: wkv6_scan(*a, w, u, s0)[0].sum(),
+                  argnums=(0, 1, 2))(*args)
+    g2 = jax.grad(lambda *a: wkv6_chunked(*a, w, u, s0, 16)[0].sum(),
+                  argnums=(0, 1, 2))(*args)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3,
+                                   atol=1e-3)
+
+
+def test_moe_batched_dispatch_matches_ragged_tp1():
+    cfg = get_smoke_config("deepseek-moe-16b")
+
+    def fn(env, x):
+        params, _ = moe_lib.init_moe(jax.random.PRNGKey(3), cfg, env)
+        y1, _, m1 = moe_lib.moe_ffn(cfg, env, params, x, train=False,
+                                    dispatch="ragged")
+        y2, _, m2 = moe_lib.moe_ffn(cfg, env, params, x, train=False,
+                                    dispatch="batched")
+        return (y1.astype(jnp.float32), y2.astype(jnp.float32),
+                m1["moe/dropped_frac"], m2["moe/dropped_frac"])
+
+    call, _ = smap_env(fn, out_specs=(P(),) * 4)
+    x = jnp.asarray(np.random.RandomState(2).randn(96, cfg.d_model) * 0.3,
+                    jnp.float32)
+    y1, y2, d1, d2 = call(x)
+    assert float(d1) == 0.0
+    # batched path uses per-expert capacity: with cf=2 on near-uniform
+    # routing nothing drops, so outputs must agree
+    assert float(d2) < 0.02, d2
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=0.06,
+                               atol=0.06)
+
+
+def test_int8_quant_roundtrip():
+    rs = np.random.RandomState(3)
+    x = jnp.asarray(rs.randn(32, 256) * 3.0, jnp.bfloat16)
+    q, s = _quant_rows(x)
+    deq = q.astype(jnp.float32) * s
+    err = np.abs(np.asarray(deq) - np.asarray(x, np.float32))
+    scale = np.abs(np.asarray(x, np.float32)).max(axis=1, keepdims=True)
+    assert (err <= scale / 127 + 1e-6).all()
+
+
+def test_rwkv_model_chunk_flag_end_to_end():
+    """Full rwkv6 train step with chunked WKV matches the scan version."""
+    cfg = get_smoke_config("rwkv6-3b")
+    mesh = make_local_mesh(1, 1)
+    B, S = 2, 128
+    rs = np.random.RandomState(0)
+    batch = {"tokens": jnp.asarray(rs.randint(0, cfg.vocab_size, (B, S)),
+                                   jnp.int32),
+             "labels": jnp.asarray(rs.randint(0, cfg.vocab_size, (B, S)),
+                                   jnp.int32)}
+    losses = {}
+    for chunk in (0, 32):
+        flags = dataclasses.replace(M.DEFAULT_FLAGS, rwkv_chunk=chunk)
+        r = api.Runner(cfg, mesh, flags=flags, max_seq=S)
+        params = r.init_params(0)
+        fn = jax.jit(r.make_loss_and_grad(global_batch=B))
+        loss, _, _ = fn(params, batch, jnp.int32(10 ** 6),
+                        jax.random.PRNGKey(1))
+        losses[chunk] = float(loss)
+    assert losses[0] == pytest.approx(losses[32], rel=2e-3), losses

@@ -1,0 +1,243 @@
+"""Training-stack tests: AdamW, schedules, spike handling, EDiT math,
+data pipeline (dedup/mixture/packing), trainer integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.edit import (EDiTConfig, edit_sync, init_ema,
+                             init_outer_momentum, simulate_sync_timeline)
+from repro.core.spikes import SpikeConfig, SpikeDetector
+from repro.data.pipeline import DataPipeline, PipelineConfig
+from repro.optim import adamw
+from repro.optim.schedule import BatchSizeWarmup, InvSqrtAnnealing, WSDSchedule
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_matches_reference():
+    """One AdamW step vs a hand-rolled numpy reference."""
+    rs = np.random.RandomState(0)
+    p = {"w": jnp.asarray(rs.randn(4, 3), jnp.float32)}
+    g = {"w": jnp.asarray(rs.randn(4, 3), jnp.float32)}
+    st_ = adamw.init_opt_state(p)
+    cfg = adamw.AdamWConfig(weight_decay=0.1)
+    newp, st2 = adamw.apply_updates(p, g, st_, jnp.float32(1e-2), cfg)
+
+    gw = np.asarray(g["w"])
+    m = 0.1 * gw
+    v = 0.05 * gw * gw
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.95)
+    want = np.asarray(p["w"]) - 1e-2 * (
+        mhat / (np.sqrt(vhat) + 1e-8) + 0.1 * np.asarray(p["w"]))
+    np.testing.assert_allclose(np.asarray(newp["w"]), want, rtol=1e-5)
+    assert int(st2["count"]) == 1
+
+
+def test_adamw_converges_quadratic():
+    p = {"w": jnp.ones((8,), jnp.float32) * 5}
+    st_ = adamw.init_opt_state(p)
+    cfg = adamw.AdamWConfig(weight_decay=0.0)
+    for _ in range(300):
+        g = {"w": 2 * p["w"]}
+        p, st_ = adamw.apply_updates(p, g, st_, jnp.float32(0.05), cfg)
+    assert float(jnp.abs(p["w"]).max()) < 0.1
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+def test_wsd_schedule():
+    s = WSDSchedule(max_lr=1e-3, warmup_steps=100, halve_frac=0.6,
+                    total_steps=1000)
+    assert float(s(0)) == 0.0
+    assert float(s(50)) == pytest.approx(5e-4)
+    assert float(s(100)) == pytest.approx(1e-3)
+    assert float(s(500)) == pytest.approx(1e-3)      # stable
+    assert float(s(700)) == pytest.approx(5e-4)      # halved at 60%
+
+
+def test_annealing_endpoints():
+    s = InvSqrtAnnealing(lr_start=1.2e-4, lr_end=1.2e-8, steps=1000)
+    assert float(s(0)) == pytest.approx(1.2e-4)
+    assert float(s(1000)) == pytest.approx(1.2e-8, rel=0.01)
+    lrs = [float(s(t)) for t in range(0, 1001, 100)]
+    assert all(a >= b for a, b in zip(lrs, lrs[1:]))   # monotone
+
+
+def test_batch_warmup():
+    b = BatchSizeWarmup(start=2560, end=8960, warmup_steps=100)
+    assert b(0) == 2560
+    assert b(100) == 8960
+    sizes = [b(i) for i in range(0, 101, 10)]
+    assert all(x <= y for x, y in zip(sizes, sizes[1:]))
+    assert all(s % 256 == 0 for s in sizes)
+
+
+# ---------------------------------------------------------------------------
+# spikes (§3.4.4)
+# ---------------------------------------------------------------------------
+
+
+def test_spike_detection_and_retry():
+    det = SpikeDetector(SpikeConfig(warmup_steps=5, wide_after=3))
+    rs = np.random.RandomState(0)
+    losses = list(4.0 - 0.001 * np.arange(100) + 0.01 * rs.randn(100))
+    skipped = []
+    for i, l in enumerate(losses):
+        if i == 50:
+            l += 3.0  # narrow spike
+        v = det.observe(i, l, batch={"id": i})
+        if v["skip"]:
+            skipped.append(i)
+    assert skipped == [50]
+    assert det.events[0].kind == "narrow"
+    assert det.pop_retry() == {"id": 50}      # sample retry (§3.4.4)
+    assert det.pop_retry() is None
+
+
+def test_wide_spike_reduces_lr():
+    det = SpikeDetector(SpikeConfig(warmup_steps=5, wide_after=3,
+                                    lr_reduce_steps=20))
+    for i in range(30):
+        det.observe(i, 4.0)
+    for j in range(5):  # persistent spike
+        v = det.observe(30 + j, 8.0)
+        assert v["skip"]
+    assert v["kind"] == "wide"
+    assert v["lr_scale"] == 0.5
+    assert det.lr_reduced_until > 34
+    # spiking losses never polluted the running stats
+    assert det.mean == pytest.approx(4.0, abs=0.1)
+
+
+# ---------------------------------------------------------------------------
+# EDiT (§2.2)
+# ---------------------------------------------------------------------------
+
+
+def _toy_params(val):
+    return {"layer": jnp.full((4,), val, jnp.float32)}
+
+
+def test_edit_sync_averages():
+    base = _toy_params(1.0)
+    workers = [_toy_params(0.9), _toy_params(0.8)]
+    newp, ema, om, info = edit_sync(base, workers, init_ema(2),
+                                    init_outer_momentum(base),
+                                    EDiTConfig(clip_norm=1e9,
+                                               outer_momentum=0.0))
+    # pseudo grads 0.1 and 0.2; weights ~ (1/0.1, 1/0.2) normalized
+    w = np.asarray(info["weights"])
+    assert w[0] == pytest.approx(2 / 3, rel=1e-3)
+    avg_pg = w[0] * 0.1 + w[1] * 0.2
+    np.testing.assert_allclose(np.asarray(newp["layer"]),
+                               1.0 - avg_pg, rtol=1e-4)
+
+
+def test_edit_anomaly_elimination():
+    base = _toy_params(1.0)
+    cfg = EDiTConfig(anomaly_sigma=1.5, ema_decay=0.0, clip_norm=1e9,
+                     outer_momentum=0.0)
+    ema = init_ema(4)
+    om = init_outer_momentum(base)
+    # build EMA history with normal workers
+    for _ in range(5):
+        workers = [_toy_params(0.9)] * 4
+        _, ema, _, _ = edit_sync(base, workers, ema, om, cfg)
+    # now worker 3 diverges wildly
+    workers = [_toy_params(0.9)] * 3 + [_toy_params(-50.0)]
+    newp, ema, om, info = edit_sync(base, workers, ema, om, cfg)
+    kept = np.asarray(info["kept"])
+    assert kept[:3].all() and not kept[3]
+    # the diverged worker contributed nothing
+    np.testing.assert_allclose(np.asarray(newp["layer"]), 0.9, atol=1e-4)
+
+
+def test_edit_clipping():
+    base = _toy_params(0.0)
+    workers = [_toy_params(-100.0)]
+    cfg = EDiTConfig(clip_norm=1.0, outer_momentum=0.0, anomaly_sigma=1e9)
+    newp, *_ = edit_sync(base, workers, init_ema(1),
+                         init_outer_momentum(base), cfg)
+    assert float(jnp.linalg.norm(newp["layer"])) <= 1.0 + 1e-5
+
+
+def test_edit_timeline_speedup():
+    """Fig-8 shape: speedup grows with worker count, up to the paper's
+    ~66% regime under heavy straggling."""
+    sp = [simulate_sync_timeline(n, 400, straggler_frac=0.05,
+                                 straggler_slowdown=4.0, sync_cost_s=0.4,
+                                 seed=1)["speedup"]
+          for n in (4, 16, 64, 256)]
+    assert sp[-1] > sp[0], sp             # grows with scale (Fig. 8 trend)
+    assert max(sp) > 1.5 and all(x > 1.0 for x in sp), sp
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_shapes_and_labels():
+    p = DataPipeline(PipelineConfig(vocab_size=1000, seq_len=64,
+                                    batch_size=4))
+    b = p.next_batch()
+    assert b["tokens"].shape == (4, 64)
+    # labels are next-token shifted (within each packed row)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_pipeline_dedup_drops_duplicates():
+    from repro.data.pipeline import DedupFilter
+    d = DedupFilter()
+    doc = np.arange(50, dtype=np.int32)
+    assert d.admit(doc)
+    assert not d.admit(doc.copy())
+    assert d.admit(doc + 1)
+    assert d.dropped == 1
+
+
+def test_pipeline_mixture_changes_distribution():
+    cfg = PipelineConfig(vocab_size=5000, seq_len=256, batch_size=4, seed=1)
+    p1 = DataPipeline(cfg)
+    p1.set_mixture({"web": 1.0, "books": 0, "code": 0, "math": 0,
+                    "encyclopedia": 0})
+    p2 = DataPipeline(cfg)
+    p2.set_mixture({"code": 1.0, "web": 0, "books": 0, "math": 0,
+                    "encyclopedia": 0})
+    t1 = p1.next_batch()["tokens"].reshape(-1)
+    t2 = p2.next_batch()["tokens"].reshape(-1)
+    # different domain permutations -> token histograms must differ a lot
+    h1 = np.bincount(t1, minlength=5000)
+    h2 = np.bincount(t2, minlength=5000)
+    overlap = np.minimum(h1, h2).sum() / max(h1.sum(), 1)
+    assert overlap < 0.5, overlap
+
+
+def test_pipeline_retry_injection():
+    p = DataPipeline(PipelineConfig(vocab_size=100, seq_len=16,
+                                    batch_size=2, retry_injection_prob=1.0))
+    marker = {"tokens": np.full((2, 16), 7, np.int32),
+              "labels": np.full((2, 16), 7, np.int32)}
+    p.push_retry(marker)
+    b = p.next_batch()
+    assert (b["tokens"] == 7).all()
+    assert p.stats["retry_injected"] == 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 64), st.integers(1, 8))
+def test_pipeline_packing_property(seq_len, batch):
+    p = DataPipeline(PipelineConfig(vocab_size=500, seq_len=seq_len,
+                                    batch_size=batch, dedup=False))
+    b = p.next_batch()
+    assert b["tokens"].shape == (batch, seq_len)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 500

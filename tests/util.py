@@ -1,0 +1,23 @@
+"""Shared test helpers."""
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import make_local_mesh
+from repro.sharding import make_axis_env
+
+
+def smap_env(fn, *, out_specs=None):
+    """Run a model-internal function under a 1x1 shard_map so axis names
+    exist.  fn(env, *args); all args/outputs replicated."""
+    mesh = make_local_mesh(1, 1)
+    env = make_axis_env(mesh)
+
+    def call(*args):
+        wrapped = jax.shard_map(
+            lambda *a: fn(env, *a), mesh=mesh,
+            in_specs=tuple(P() for _ in args),
+            out_specs=out_specs if out_specs is not None else P(),
+            check_vma=False)
+        return wrapped(*args)
+
+    return call, env
