@@ -15,12 +15,13 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import model as M
 from repro.optim import adamw
+from repro import sharding
 from repro.sharding import AxisEnv, make_axis_env
 
 
 def _shard_map(fn, mesh, in_specs, out_specs):
-    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False)
+    return sharding.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs)
 
 
 def batch_sharding(env: AxisEnv, global_batch: int) -> Any:

@@ -8,10 +8,26 @@ Design (TPU adaptation of the paper's group_gemm hot path — see DESIGN.md §3)
   all-to-all is required — each rank computes its experts' contribution for
   all of its dp-shard's tokens and the combine is the same reduce-scatter
   every TP block already performs.
-* Within a rank the expert compute is a **grouped (ragged) matmul**: token
-  slots are sorted by local expert id and fed to `grouped_matmul` (the
-  Pallas kernel target; `jax.lax.ragged_dot` is the lowering used under
-  jit).  With tp=1 the buffer holds all T*k slots — exactly the paper's
+* Within a rank the expert compute runs in one of three dispatch modes
+  (see `moe_ffn`):
+
+  - "fused" (default at tp=1): the whole gather -> grouped two-GEMM FFN ->
+    gate-weighted combine runs as ONE Pallas kernel
+    (`kernels/grouped_matmul.fused_moe_ffn`).  No aligned-lhs relayout, no
+    (cap, ff) HBM intermediate, no separate scatter-add — the paper's
+    `group_gemm` hot path with dispatch/combine fused in, which is where
+    DeepSpeed-MoE-style systems win MoE step time.  The backward pass is a
+    custom-vjp that recomputes through the mathematically identical ragged
+    composition (the kernel itself is forward-only).
+  - "ragged": token slots sorted by local expert id + `jax.lax.ragged_dot`.
+    Exactly dropless at tp=1 and fully differentiable end-to-end, but XLA
+    backends without a grouped-GEMM lowering compute it as E_loc dense
+    GEMMs — the E_loc x FLOP waste the kernel exists to remove.
+  - "batched": per-expert capacity blocks + plain batched einsum — equal
+    MXU tiles per expert; the right form at tp>1 where drops are bounded
+    per-expert anyway.
+
+  With tp=1 the buffer holds all T*k slots — exactly the paper's
   *dropless* routing.  With tp>1 each rank's buffer is
   ceil(T*k/tp * capacity_factor): the Stochastic Routing Warmup plus the
   balance loss keep expert load near-uniform, so cf=2.0 drops ~nothing
@@ -21,13 +37,16 @@ Design (TPU adaptation of the paper's group_gemm hot path — see DESIGN.md §3)
 """
 from __future__ import annotations
 
+import functools
 from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import sharding
 from repro.core import router as router_lib
+from repro.kernels import ops as kops
 from repro.models import layers as L
 from repro.sharding import AxisEnv, fsdp_spec, pad_to_multiple
 
@@ -90,6 +109,62 @@ def grouped_ffn(cfg, w1, w2, w3, xs, group_sizes):
     return jax.lax.ragged_dot(h, w2, group_sizes)
 
 
+def _fused_ragged_ref(act, x, w1, w2, w3, tok, gate, group_sizes):
+    """Differentiable ragged-dot composition with the exact same math as
+    the fused kernel (fp32 accumulation): gather -> FFN -> gated combine.
+    Used as the custom-vjp backward of `fused_ffn` and as the exact-parity
+    fallback when the fused path is unavailable."""
+    T, d = x.shape
+    xs = jnp.take(x, tok, axis=0).astype(jnp.float32)
+    w1f, w2f = w1.astype(jnp.float32), w2.astype(jnp.float32)
+    h = jax.lax.ragged_dot(xs, w1f, group_sizes)
+    if w3 is not None:
+        h = L._act(act, h) * jax.lax.ragged_dot(
+            xs, w3.astype(jnp.float32), group_sizes)
+    else:
+        h = L._act(act, h)
+    out = jax.lax.ragged_dot(h, w2f, group_sizes)      # rows past sum() = 0
+    out = out * gate.astype(jnp.float32)[:, None]
+    return jnp.zeros((T, d), jnp.float32).at[tok].add(out)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def fused_ffn(act, x, w1, w2, w3, tok, gate, group_sizes):
+    """Fused MoE FFN dispatch (forward: one Pallas kernel; backward:
+    recompute through the identical ragged composition)."""
+    return kops.moe_fused_ffn(x, w1, w2, w3, tok, gate, group_sizes,
+                              act=act)
+
+
+def _fused_ffn_fwd(act, x, w1, w2, w3, tok, gate, group_sizes):
+    out = kops.moe_fused_ffn(x, w1, w2, w3, tok, gate, group_sizes,
+                             act=act)
+    return out, (x, w1, w2, w3, tok, gate, group_sizes)
+
+
+def _fused_ffn_bwd(act, res, g):
+    x, w1, w2, w3, tok, gate, group_sizes = res
+    has_w3 = w3 is not None
+
+    def f(x, w1, w2, gate, *maybe_w3):
+        w3_ = maybe_w3[0] if maybe_w3 else None
+        return _fused_ragged_ref(act, x, w1, w2, w3_, tok, gate,
+                                 group_sizes)
+
+    diff_args = (x, w1, w2, gate) + ((w3,) if has_w3 else ())
+    _, pull = jax.vjp(f, *diff_args)
+    grads = pull(g.astype(jnp.float32))
+    dx, dw1, dw2, dgate = grads[:4]
+    dw3 = grads[4] if has_w3 else None
+    int_zero = lambda a: np.zeros(a.shape, jax.dtypes.float0)
+    return (dx.astype(x.dtype), dw1.astype(w1.dtype), dw2.astype(w2.dtype),
+            dw3.astype(w3.dtype) if has_w3 else None,
+            int_zero(tok), dgate.astype(gate.dtype), int_zero(group_sizes))
+
+
+fused_ffn.defvjp(_fused_ffn_fwd, _fused_ffn_bwd)
+
+
 def expert_capacity(cfg, env: AxisEnv, n_tokens: int) -> int:
     """Per-EXPERT dispatch rows for the batched path (global semantics:
     C_e = T*k*cf/E, so total rows match the per-rank ragged capacity)."""
@@ -110,13 +185,20 @@ def moe_ffn(cfg, env: AxisEnv, params, x: jax.Array, *,
     exactly like a row-parallel dense FFN.
 
     dispatch:
+      "fused"   ONE Pallas kernel for gather -> grouped two-GEMM FFN ->
+                gate-weighted combine (kernels/grouped_matmul.fused_moe_ffn):
+                no aligned-lhs relayout, no (cap, ff) HBM round-trip, no
+                separate scatter-add; fp32 accumulation throughout.
+                Same dropless/capacity semantics as "ragged".
       "ragged"  sort + jax.lax.ragged_dot (exactly dropless at tp=1; XLA
                 without a grouped-gemm lowering computes it as a dense
                 batched dot over local experts — E_loc x FLOP waste);
       "batched" per-expert-capacity blocks + plain batched einsum — the
                 TPU-native form (equal MXU tiles per expert, no waste);
                 drops are bounded per-expert instead of per-rank;
-      "auto"    batched when tp>1, ragged (dropless) at tp=1.
+      "auto"    tp>1: batched.  tp=1: fused where validated (interpret
+                builds), ragged on real TPU hardware until the fused
+                kernel tiles its (T, d) blocks (ROADMAP follow-up).
     """
     m = cfg.moe
     T, d = x.shape
@@ -124,7 +206,17 @@ def moe_ffn(cfg, env: AxisEnv, params, x: jax.Array, *,
     ep, e_loc = padded_experts(cfg, env)
     cap = capacity(cfg, env, T)
     if dispatch == "auto":
-        dispatch = "batched" if env.tp > 1 else "ragged"
+        # fused is the tp=1 default where the pipeline is validated
+        # (interpret mode).  On real TPUs the kernel as written keeps the
+        # full (T, d) in/out blocks VMEM-resident, which does not fit at
+        # training shapes — stay on ragged there until the ROADMAP tile
+        # sweep (T-tiled output + DMA gather) lands.
+        if env.tp > 1:
+            dispatch = "batched"
+        else:
+            dispatch = "fused" if kops.INTERPRET else "ragged"
+    if dispatch not in ("fused", "ragged", "batched"):
+        raise ValueError(f"unknown moe dispatch mode: {dispatch!r}")
 
     top_w, top_i, aux, metrics = router_lib.route(
         cfg, env, params["router"], x, step=step, rng=rng, train=train)
@@ -144,7 +236,7 @@ def moe_ffn(cfg, env: AxisEnv, params, x: jax.Array, *,
     w3 = (env.gather_fsdp(params["we3"], 1, dtype=cdt)
           if "we3" in params else None)
 
-    if dispatch == "ragged":
+    if dispatch in ("ragged", "fused"):
         sel = order[:cap]                          # (cap,) slot indices
         tok = sel // m.top_k                       # token per slot
         skey = sort_key[sel]                       # sorted expert keys
@@ -153,10 +245,14 @@ def moe_ffn(cfg, env: AxisEnv, params, x: jax.Array, *,
         group_sizes = jnp.sum(
             jax.nn.one_hot(jnp.where(valid, skey, e_loc), e_loc + 1,
                            dtype=jnp.int32)[:, :e_loc], axis=0)
-        xs = jnp.take(x, tok, axis=0).astype(cdt)  # (cap, d) gather
-        out = grouped_ffn(cfg, w1, w2, w3, xs, group_sizes)   # (cap, d)
         gates = (flat_w[sel] * valid).astype(cdt)
-        y = jnp.zeros((T, d), cdt).at[tok].add(out * gates[:, None])
+        if dispatch == "fused":
+            y = fused_ffn(cfg.mlp_act, x.astype(cdt), w1, w2, w3, tok,
+                          gates, group_sizes).astype(cdt)
+        else:
+            xs = jnp.take(x, tok, axis=0).astype(cdt)  # (cap, d) gather
+            out = grouped_ffn(cfg, w1, w2, w3, xs, group_sizes)  # (cap, d)
+            y = jnp.zeros((T, d), cdt).at[tok].add(out * gates[:, None])
         n_kept = jnp.sum(valid)
     else:
         # per-expert-capacity batched dispatch: expert e's rows live at

@@ -62,7 +62,6 @@ def normhead_matmul(x: jax.Array, w: jax.Array, *, bt: int = 128,
         scratch_shapes=[pltpu.VMEM((bt, bv), jnp.float32),
                         pltpu.VMEM((1, bv), jnp.float32)],
         out_shape=jax.ShapeDtypeStruct((T, V), jnp.float32),
-        interpret=(pltpu.InterpretParams()
-                   if interpret else False),
+        interpret=interpret,
     )
     return fn(x, w)

@@ -31,7 +31,9 @@ def _align_groups(lhs, group_sizes, bm: int):
     M_pad_max = int(M + G * (bm - 1))
     M_pad_max = ((M_pad_max + bm - 1) // bm) * bm
     rows = jnp.arange(M_pad_max)
-    gid = jnp.sum(rows[:, None] >= (out_starts + padded)[None, :], axis=1)
+    # group of each padded row: binary search over the G aligned group-end
+    # boundaries (O(M_pad log G), vs the old O(M_pad * G) compare matrix)
+    gid = jnp.searchsorted(out_starts + padded, rows, side="right")
     gid_c = jnp.clip(gid, 0, G - 1)
     off = rows - jnp.take(out_starts, gid_c)
     src = jnp.take(in_starts, gid_c) + off
@@ -73,6 +75,68 @@ def grouped_matmul(lhs, rhs, group_sizes, *, bm: int = 128, bk: int = 128,
     out = out.at[jnp.clip(row_map, 0)].add(
         jnp.where(ok[:, None], out_pad, 0))
     return out
+
+
+def _fused_layout(tok, gate, group_sizes, n_tokens: int, bm: int):
+    """Index-only analogue of `_align_groups` for the fused MoE pipeline.
+
+    tok (cap,): source token per expert-sorted dispatch slot; gate (cap,):
+    router weight per slot (0 where masked); group_sizes (G,): rows per
+    expert among the first sum(group_sizes) slots.  Returns
+    (row_idx (n_m, bm) int32 token per padded row, clamped to [0, T);
+     gates (n_m, bm) fp32, 0 for padding;  tile_group (n_m,) int32 expert
+     per tile, G for all-padding tiles).  Nothing is materialized beyond
+    these index/gate arrays — the aligned-lhs copy the unfused wrapper
+    writes to HBM simply does not exist here.
+    """
+    cap = tok.shape[0]
+    G = group_sizes.shape[0]
+    padded = ((group_sizes + bm - 1) // bm) * bm
+    bounds = jnp.cumsum(padded)                          # aligned group ends
+    out_starts = bounds - padded
+    in_starts = jnp.cumsum(group_sizes) - group_sizes
+    M_pad = int(cap + G * (bm - 1))
+    M_pad = ((M_pad + bm - 1) // bm) * bm
+    rows = jnp.arange(M_pad)
+    gid = jnp.searchsorted(bounds, rows, side="right")
+    gid_c = jnp.clip(gid, 0, G - 1)
+    off = rows - jnp.take(out_starts, gid_c)
+    valid = (gid < G) & (off < jnp.take(group_sizes, gid_c))
+    src = jnp.clip(jnp.take(in_starts, gid_c) + off, 0, cap - 1)
+    row_idx = jnp.where(valid, jnp.take(tok, src), 0)
+    row_idx = jnp.clip(row_idx, 0, n_tokens - 1).astype(jnp.int32)
+    gates = jnp.where(valid, jnp.take(gate, src), 0.0).astype(jnp.float32)
+    tile_group = jnp.where(jnp.take(valid, rows[::bm]),
+                           gid_c[::bm].astype(jnp.int32), jnp.int32(G))
+    return (row_idx.reshape(-1, bm), gates.reshape(-1, bm), tile_group)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("act", "bm", "bf", "interpret"))
+def moe_fused_ffn(x, w1, w2, w3, tok, gate, group_sizes, *,
+                  act: str = "swiglu", bm: int = 128, bf: int = 128,
+                  interpret: bool | None = None):
+    """Fused MoE FFN pipeline: gather -> w1/(w3) -> act -> w2 -> gate*out
+    combine, one Pallas kernel, no HBM intermediates.
+
+    x (T, d) unsorted activations; w1/w3 (G, d, ff), w2 (G, ff, d) (w3
+    None for non-gated acts); tok (cap,) token per expert-sorted slot;
+    gate (cap,) router weight (0 where masked); group_sizes (G,) rows per
+    expert.  Slots beyond sum(group_sizes) are dropped (ragged_dot
+    semantics).  Returns the combined (T, d) fp32 partial.
+    """
+    interpret = INTERPRET if interpret is None else interpret
+    T, d = x.shape
+    G, _, ff = w1.shape
+    cap = tok.shape[0]
+    bm = min(bm, max(8, cap))
+    bf_ = min(bf, ff)
+    while ff % bf_:
+        bf_ //= 2
+    row_idx, gates, tile_group = _fused_layout(tok, gate, group_sizes,
+                                               T, bm)
+    return _gm.fused_moe_ffn(x, w1, w2, w3, row_idx, gates, tile_group,
+                             act=act, bf=bf_, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("bt", "bv", "bk", "interpret"))

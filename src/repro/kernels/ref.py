@@ -24,6 +24,35 @@ def grouped_matmul_ref(lhs: jax.Array, rhs: jax.Array,
     return jnp.where(valid[:, None], out, 0.0).astype(lhs.dtype)
 
 
+def fused_moe_ffn_ref(x, w1, w2, w3, tok, gate, group_sizes,
+                      act="swiglu"):
+    """Oracle for the fused MoE FFN pipeline: gather x[tok], run the
+    grouped expert FFN (fp32 accumulation, gid from group_sizes), combine
+    gate-weighted rows back into (T, d).  Slots past sum(group_sizes)
+    drop (ragged_dot semantics)."""
+    from repro.kernels.grouped_matmul import _ACTS
+    act_fn = _ACTS[act]
+    T, d = x.shape
+    xs = jnp.take(x, tok, axis=0).astype(jnp.float32)        # (cap, d)
+    cap = xs.shape[0]
+    G = w1.shape[0]
+    ends = jnp.cumsum(group_sizes)
+    gid = jnp.searchsorted(ends, jnp.arange(cap), side="right")
+    valid = jnp.arange(cap) < ends[-1]
+    gid_c = jnp.clip(gid, 0, G - 1)
+    w1r = jnp.take(w1, gid_c, axis=0).astype(jnp.float32)    # (cap, d, ff)
+    h = jnp.einsum("md,mdf->mf", xs, w1r)
+    if w3 is not None:
+        w3r = jnp.take(w3, gid_c, axis=0).astype(jnp.float32)
+        h = act_fn(h) * jnp.einsum("md,mdf->mf", xs, w3r)
+    else:
+        h = act_fn(h)
+    w2r = jnp.take(w2, gid_c, axis=0).astype(jnp.float32)    # (cap, ff, d)
+    out = jnp.einsum("mf,mfd->md", h, w2r)
+    out = out * (gate.astype(jnp.float32) * valid)[:, None]
+    return jnp.zeros((T, d), jnp.float32).at[tok].add(out)
+
+
 def normhead_ref(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
     """x (T, d), w (V, d) -> logits (T, V) with L2-normalized rows of w
     (paper Eq. 4), fp32 accumulation."""

@@ -70,8 +70,7 @@ def wkv6_chunked(r, k, v, w, u, s0, *, chunk: int = 256,
         scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
         out_shape=[jax.ShapeDtypeStruct((BH, T, hd), r.dtype),
                    jax.ShapeDtypeStruct((BH, hd, hd), jnp.float32)],
-        interpret=(pltpu.InterpretParams()
-                   if interpret else False),
+        interpret=interpret,
     )
     y, sT = fn(r, k, v, w, u, s0)
     return y, sT

@@ -182,7 +182,7 @@ def main():
     ap.add_argument("--schedule", default="causal",
                     choices=["full", "causal", "window"])
     ap.add_argument("--moe-dispatch", default="auto",
-                    choices=["auto", "ragged", "batched"])
+                    choices=["auto", "fused", "ragged", "batched"])
     ap.add_argument("--rwkv-chunk", type=int, default=0)
     ap.add_argument("--sp-comm", default="native",
                     choices=["native", "int8"])

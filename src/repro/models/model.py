@@ -34,7 +34,10 @@ class RunFlags:
     remat: bool = True
     loss_chunk: int = 2048
     attn_block: int = 1024
-    moe_dispatch: str = "auto"         # "ragged" | "batched" | "auto"
+    # "fused" | "ragged" | "batched" | "auto" (auto: batched at tp>1;
+    # at tp=1 the fused Pallas MoE pipeline on interpret builds, ragged
+    # on real TPUs — see core/moe.py::moe_ffn)
+    moe_dispatch: str = "auto"
     rwkv_chunk: int = 0                # >0: chunked-parallel WKV6
 
 

@@ -50,6 +50,89 @@ def test_grouped_matmul_vs_ragged_dot():
 
 
 # ---------------------------------------------------------------------------
+# fused MoE FFN pipeline (gather -> grouped two-GEMM FFN -> combine)
+# ---------------------------------------------------------------------------
+
+FUSED_CASES = [
+    # (T, d, ff, group_sizes, cap, gated, dtype) — cap > sum(gs) means the
+    # trailing slots are overflow/dropped rows
+    (48, 32, 48, [10, 22, 16], 48, True, jnp.float32),     # uneven, exact
+    (64, 32, 64, [0, 40, 0, 15], 64, True, jnp.float32),   # empty groups
+    (50, 32, 48, [13, 0, 25, 7, 20], 70, True, jnp.float32),  # overflow
+    (48, 32, 48, [10, 22, 16], 48, False, jnp.float32),    # non-gated
+    (48, 32, 64, [18, 30], 60, True, jnp.bfloat16),        # bf16 in
+    (32, 16, 32, [32], 32, True, jnp.float32),             # single group
+]
+
+
+def _fused_inputs(T, d, ff, gs, cap, gated, dtype, seed=7):
+    rs = np.random.RandomState(seed)
+    G = len(gs)
+    x = jnp.asarray(rs.randn(T, d), dtype)
+    w1 = jnp.asarray(rs.randn(G, d, ff) * 0.1, dtype)
+    w2 = jnp.asarray(rs.randn(G, ff, d) * 0.1, dtype)
+    w3 = jnp.asarray(rs.randn(G, d, ff) * 0.1, dtype) if gated else None
+    tok = jnp.asarray(rs.randint(0, T, cap), jnp.int32)
+    gate = jnp.asarray(rs.rand(cap), jnp.float32)
+    sizes = jnp.asarray(gs, jnp.int32)
+    return x, w1, w2, w3, tok, gate, sizes
+
+
+@pytest.mark.parametrize("T,d,ff,gs,cap,gated,dtype", FUSED_CASES)
+def test_fused_moe_ffn_vs_oracle(T, d, ff, gs, cap, gated, dtype):
+    x, w1, w2, w3, tok, gate, sizes = _fused_inputs(T, d, ff, gs, cap,
+                                                    gated, dtype)
+    act = "swiglu" if gated else "gelu"
+    got = ops.moe_fused_ffn(x, w1, w2, w3, tok, gate, sizes, act=act,
+                            bm=16, bf=16, interpret=True)
+    want = ref.fused_moe_ffn_ref(x, w1, w2, w3, tok, gate, sizes, act=act)
+    assert got.dtype == jnp.float32            # fp32 accumulation out
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_fused_moe_ffn_vs_ragged_dot_composition():
+    """Fused pipeline == gather + jax.lax.ragged_dot FFN + scatter-add
+    (the unfused reference the dispatch modes fall back to)."""
+    T, d, ff, gs, cap = 50, 32, 48, [13, 0, 25, 7, 20], 70
+    x, w1, w2, w3, tok, gate, sizes = _fused_inputs(T, d, ff, gs, cap,
+                                                    True, jnp.float32)
+    got = ops.moe_fused_ffn(x, w1, w2, w3, tok, gate, sizes, bm=16, bf=16,
+                            interpret=True)
+    xs = jnp.take(x, tok, axis=0)
+    h = jax.nn.silu(jax.lax.ragged_dot(xs, w1, sizes)) \
+        * jax.lax.ragged_dot(xs, w3, sizes)
+    out = jax.lax.ragged_dot(h, w2, sizes) * gate[:, None]
+    want = jnp.zeros((T, d), jnp.float32).at[tok].add(out)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_moe_ffn_bf16_fp32_accum():
+    """bf16 inputs accumulate in fp32: the fused result must sit closer to
+    the fp32 oracle than pure-bf16 compute would."""
+    T, d, ff, gs, cap = 48, 32, 64, [18, 30], 48
+    x, w1, w2, w3, tok, gate, sizes = _fused_inputs(T, d, ff, gs, cap,
+                                                    True, jnp.bfloat16)
+    got = ops.moe_fused_ffn(x, w1, w2, w3, tok, gate, sizes, bm=16, bf=16,
+                            interpret=True)
+    want = ref.fused_moe_ffn_ref(x, w1, w2, w3, tok, gate, sizes)
+    err = np.max(np.abs(np.asarray(got) - np.asarray(want)))
+    assert err < 1e-5                # identical fp32 math, just bf16 inputs
+
+
+def test_fused_moe_ffn_all_dropped():
+    """gate == 0 everywhere (or empty buffer) must produce exact zeros."""
+    T, d, ff = 32, 16, 32
+    x, w1, w2, w3, tok, gate, sizes = _fused_inputs(T, d, ff, [20], 32,
+                                                    True, jnp.float32)
+    got = ops.moe_fused_ffn(x, w1, w2, w3, tok, jnp.zeros_like(gate),
+                            sizes, bm=16, bf=16, interpret=True)
+    assert float(jnp.max(jnp.abs(got))) == 0.0
+
+
+# ---------------------------------------------------------------------------
 # normhead
 # ---------------------------------------------------------------------------
 

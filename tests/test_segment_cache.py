@@ -2,7 +2,7 @@
 allocator invariants (no overlap, coalesced free list, waiter progress)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from util import given, settings, st   # hypothesis, or a skip shim
 
 from repro.serving.segment_cache import SegmentCache
 

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from util import given, settings, st   # hypothesis, or a skip shim
 
 from repro.core.edit import (EDiTConfig, edit_sync, init_ema,
                              init_outer_momentum, simulate_sync_timeline)

@@ -2,6 +2,36 @@
 import jax
 from jax.sharding import PartitionSpec as P
 
+# Optional-dep shim: `hypothesis` is not installed in every container.
+# Property tests import given/settings/st from here; without hypothesis
+# they collect as skipped instead of crashing the whole run.
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    import pytest as _pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return _pytest.mark.skip(
+                reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _StrategyStub:
+        """st.integers(...)/st.lists(...) evaluate at collection time;
+        the skipped test never calls the result."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+from repro import sharding
 from repro.launch.mesh import make_local_mesh
 from repro.sharding import make_axis_env
 
@@ -13,11 +43,10 @@ def smap_env(fn, *, out_specs=None):
     env = make_axis_env(mesh)
 
     def call(*args):
-        wrapped = jax.shard_map(
+        wrapped = sharding.shard_map(
             lambda *a: fn(env, *a), mesh=mesh,
             in_specs=tuple(P() for _ in args),
-            out_specs=out_specs if out_specs is not None else P(),
-            check_vma=False)
+            out_specs=out_specs if out_specs is not None else P())
         return wrapped(*args)
 
     return call, env
