@@ -1,6 +1,9 @@
 """Pallas kernel micro-timings (interpret mode on CPU: correctness-path
 cost, NOT TPU performance) + the analytic HBM-traffic savings of the two
-fused kernels (their reason to exist):
+fused kernels (their reason to exist) + an expert-parallel dispatch case
+(fused tp=1 vs ep tp=2 on a 2-device forced host-platform mesh — the
+device count must be forced before jax initializes, so it runs in a
+subprocess):
 
   * NormHead: unfused reads W, writes W_n, reads W_n; fused reads W once.
   * Fused MoE FFN: composing gather + 3x grouped_matmul (wrapper) +
@@ -12,6 +15,11 @@ Timed cases use interpret-safe shapes (Ling-Lite MoE structure — 64
 experts, top-6, expert_d_ff=1408 — with d scaled down); the analytic
 rows use the real Ling-Lite / Ling-Plus dimensions.
 """
+import json
+import os
+import subprocess
+import sys
+import textwrap
 import time
 
 import jax
@@ -19,6 +27,84 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
+
+_EP_BENCH_SCRIPT = textwrap.dedent("""
+    import os, sys, time, json
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=2")
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.configs.base import get_smoke_config
+    from repro.launch.mesh import make_local_mesh
+    from repro import sharding
+    from repro.sharding import make_axis_env
+    from repro.core import moe as moe_lib
+
+    fast = sys.argv[1] == "fast"
+    reps, warmup = (2, 1) if fast else (5, 2)
+    cfg = get_smoke_config("deepseek-moe-16b")
+    T = 64 if fast else 128
+    x = jnp.asarray(np.random.RandomState(0).randn(T, cfg.d_model) * 0.3,
+                    jnp.float32)
+
+    def build(tp, dispatch):
+        mesh = make_local_mesh(1, tp)
+        env = make_axis_env(mesh)
+        params, specs = moe_lib.init_moe(jax.random.PRNGKey(3), cfg, env)
+        def fn(p, xx):
+            y, _, _ = moe_lib.moe_ffn(cfg, env, p, xx, train=False,
+                                      dispatch=dispatch)
+            return env.sp_scatter(y.astype(jnp.float32))
+        call = jax.jit(sharding.shard_map(
+            fn, mesh=mesh, in_specs=(specs, P()),
+            out_specs=P("model")))
+        return lambda: call(params, x)
+
+    out = {}
+    ys = {}
+    for name, tp, dispatch in [("fused_tp1", 1, "fused"), ("ep_tp2", 2, "ep")]:
+        f = build(tp, dispatch)
+        for _ in range(warmup):
+            jax.block_until_ready(f())
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            ys[name] = jax.block_until_ready(f())
+            ts.append(time.perf_counter() - t0)
+        out[name + "_us"] = float(np.median(ts)) * 1e6
+    out["maxdiff"] = float(np.max(np.abs(
+        np.asarray(ys["fused_tp1"]) - np.asarray(ys["ep_tp2"]))))
+    out["T"] = T
+    print("EPBENCH " + json.dumps(out))
+""")
+
+
+def _ep_dispatch_case(fast):
+    """moe_ffn end-to-end: fused tp=1 vs expert-parallel tp=2 on a forced
+    2-device host mesh.  Returns bench rows + the parsed measurement."""
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = (src + os.pathsep + env["PYTHONPATH"]
+                         if env.get("PYTHONPATH") else src)
+    res = subprocess.run(
+        [sys.executable, "-c", _EP_BENCH_SCRIPT, "fast" if fast else "full"],
+        capture_output=True, text=True, timeout=900, env=env)
+    line = next((l for l in res.stdout.splitlines()
+                 if l.startswith("EPBENCH ")), None)
+    if res.returncode != 0 or line is None:
+        raise RuntimeError(f"ep bench subprocess failed: "
+                           f"{res.stdout[-500:]}{res.stderr[-1500:]}")
+    d = json.loads(line[len("EPBENCH "):])
+    tag = f"T{d['T']}_deepseek_moe_smoke"
+    rows = [
+        (f"moe_ffn_fused_tp1_{tag}", f"{d['fused_tp1_us']:.0f}",
+         "interpret_2dev_host_mesh"),
+        (f"moe_ffn_ep_tp2_{tag}", f"{d['ep_tp2_us']:.0f}",
+         f"all_to_all_dispatch_maxdiff_{d['maxdiff']:.1e}"),
+    ]
+    return rows, d
 
 
 def moe_ffn_hbm_bytes(T, d, ff, cap, n_groups, bm=128, dtype_bytes=2,
@@ -117,6 +203,10 @@ def run(fast=False):
     rows.append((f"kernel_moe_ffn_unfused_gmm_{tag}", f"{us:.0f}",
                  "interpret_mode_3x_aligned_wrapper"))
 
+    # ---- expert-parallel dispatch: fused tp=1 vs ep tp=2 ----------------
+    ep_rows, ep_detail = _ep_dispatch_case(fast)
+    rows.extend(ep_rows)
+
     # analytic HBM traffic at REAL Ling-Lite shapes (bf16, per dp shard
     # of 4096 tokens, one MoE layer forward)
     T_r, d_r, ff_r, E_r, k_r = 4096, 2048, 1408, 64, 6
@@ -150,7 +240,8 @@ def run(fast=False):
     rows.append((f"kernel_wkv6_{B}x{T3}x{H}x{hd}", f"{us:.0f}",
                  "interpret_mode"))
     return rows, {"note": "interpret-mode timings validate correctness "
-                          "path; TPU perf comes from the Mosaic build"}
+                          "path; TPU perf comes from the Mosaic build",
+                  "ep_dispatch": ep_detail}
 
 
 def _time(fn, reps=5, warmup=2, fast=False):

@@ -1,0 +1,69 @@
+#!/usr/bin/env python
+"""Docs link-checker: verifies that README/docs internal links resolve
+and that the README repo map names every src/repro subpackage.
+
+    python scripts/check_docs.py
+
+Exit code 0 = clean; 1 = broken links / unlisted subpackages (each
+printed).  Wired into the tier-1 run via tests/test_docs.py.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def internal_links(md: Path):
+    for target in LINK_RE.findall(md.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        yield target.split("#", 1)[0]
+
+
+def check_links() -> list:
+    errors = []
+    for md in DOC_FILES:
+        if not md.exists():
+            errors.append(f"missing doc file: {md.relative_to(ROOT)}")
+            continue
+        for target in internal_links(md):
+            if not (md.parent / target).exists():
+                errors.append(
+                    f"{md.relative_to(ROOT)}: broken link -> {target}")
+    return errors
+
+
+def check_repo_map() -> list:
+    readme = (ROOT / "README.md").read_text()
+    errors = []
+    for pkg in sorted((ROOT / "src" / "repro").iterdir()):
+        if not pkg.is_dir() or not (pkg / "__init__.py").exists():
+            continue
+        if f"src/repro/{pkg.name}" not in readme:
+            errors.append(
+                f"README repo map is missing subpackage src/repro/{pkg.name}")
+    for top in ("benchmarks", "examples", "tests", "docs"):
+        if top not in readme:
+            errors.append(f"README repo map is missing {top}/")
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_repo_map()
+    for e in errors:
+        print(f"check_docs: {e}")
+    if not errors:
+        n_links = sum(len(list(internal_links(m)))
+                      for m in DOC_FILES if m.exists())
+        print(f"check_docs: OK ({len(DOC_FILES)} files, "
+              f"{n_links} internal links)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

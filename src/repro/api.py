@@ -212,7 +212,7 @@ class Runner:
 
     # -- decode -----------------------------------------------------------------
     def make_decode_step(self, global_batch: int, seq_len: int):
-        cfg, env = self.cfg, self.env
+        cfg, env, flags = self.cfg, self.env, self.flags
         b = batch_sharding(env, global_batch)
         B_loc = (global_batch // env.dp if b is not None else global_batch)
         caches = jax.eval_shape(
@@ -221,7 +221,8 @@ class Runner:
         cache_specs = cache_partition_specs(cfg, env, caches, b)
 
         def fn(params, caches, token, pos):
-            return M.decode_step(cfg, env, params, caches, token, pos)
+            return M.decode_step(cfg, env, params, caches, token, pos,
+                                 flags=flags)
 
         in_specs = (self.specs, cache_specs, P(b), P())
         out_specs = (P(b), cache_specs)

@@ -26,6 +26,12 @@ class MoEConfig:
     n_shared_experts: int = 0      # always-on shared experts (Eq. 2)
     shared_d_ff: Optional[int] = None  # defaults to expert_d_ff * n_shared
     capacity_factor: float = 2.0   # EP-path buffer headroom (dropless path ignores)
+    # Preferred dispatch mode for this arch: "auto" | "fused" | "ragged" |
+    # "batched" | "ep".  "auto" defers to the runtime heuristic in
+    # core/moe.py::moe_ffn (interpret builds: fused at tp=1, ep at tp>1;
+    # real TPUs: ragged/batched until the ROADMAP tile sweep).  A RunFlags
+    # override (models/model.py) takes precedence over this knob.
+    dispatch: str = "auto"
     balance_loss_coef: float = 0.015   # paper §3.4.1
     z_loss_coef: float = 1e-4          # paper §3.4.1
     router_warmup_steps: int = 100     # stochastic routing warmup W (Eq. 3)

@@ -13,9 +13,13 @@ CONFIG = ModelConfig(
     n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, d_ff=1408,
     vocab_size=126464, block_pattern=("attn",), mlp_act="swiglu",
     norm_head=True,
+    # 96 experts over a 16-wide 'model' axis -> 6 experts/rank: the
+    # all-to-all EP dispatch (core/moe.py) is the only layout at this
+    # scale that does not replicate every token's FFN 16x.
     moe=MoEConfig(n_experts=96, top_k=4, expert_d_ff=1408,
                   n_shared_experts=1, balance_loss_coef=0.015,
-                  z_loss_coef=1e-4, router_warmup_steps=2000),
+                  z_loss_coef=1e-4, router_warmup_steps=2000,
+                  dispatch="ep"),
 )
 
 

@@ -2,38 +2,51 @@
 
 Design (TPU adaptation of the paper's group_gemm hot path — see DESIGN.md §3):
 
-* Routed experts are **expert-parallel over the tp ('model') axis**: rank r
-  owns experts [r*E_l, (r+1)*E_l).  Activations entering the FFN are full
-  per-dp-shard (replicated over tp, the Megatron layout), so no token
-  all-to-all is required — each rank computes its experts' contribution for
-  all of its dp-shard's tokens and the combine is the same reduce-scatter
-  every TP block already performs.
-* Within a rank the expert compute runs in one of three dispatch modes
-  (see `moe_ffn`):
+* Routed experts are **expert-sharded over the tp ('model') axis**: rank r
+  owns experts [r*E_l, (r+1)*E_l) (`sharding.ep_spec` layout).  Two token
+  layouts feed those shards:
 
-  - "fused" (default at tp=1): the whole gather -> grouped two-GEMM FFN ->
-    gate-weighted combine runs as ONE Pallas kernel
-    (`kernels/grouped_matmul.fused_moe_ffn`).  No aligned-lhs relayout, no
-    (cap, ff) HBM intermediate, no separate scatter-add — the paper's
-    `group_gemm` hot path with dispatch/combine fused in, which is where
-    DeepSpeed-MoE-style systems win MoE step time.  The backward pass is a
-    custom-vjp that recomputes through the mathematically identical ragged
-    composition (the kernel itself is forward-only).
-  - "ragged": token slots sorted by local expert id + `jax.lax.ragged_dot`.
-    Exactly dropless at tp=1 and fully differentiable end-to-end, but XLA
-    backends without a grouped-GEMM lowering compute it as E_loc dense
-    GEMMs — the E_loc x FLOP waste the kernel exists to remove.
-  - "batched": per-expert capacity blocks + plain batched einsum — equal
-    MXU tiles per expert; the right form at tp>1 where drops are bounded
-    per-expert anyway.
+  - the *Megatron* layout ("fused"/"ragged"/"batched"): activations
+    entering the FFN are full per-dp-shard (replicated over tp), so no
+    token all-to-all is required — each rank computes its experts'
+    contribution for all of its dp-shard's tokens and the combine is the
+    same reduce-scatter every TP block already performs.  Zero extra
+    communication, but every rank touches every token.
+  - the *expert-parallel* layout ("ep"): rank r owns the r-th T/tp token
+    slice, routes only those tokens, and two `all_to_all`s move each
+    routed slot to the shard that owns its expert and its FFN output back
+    (DeepSpeed-MoE / GShard style).  Per-token FFN compute happens exactly
+    once in the whole tp group instead of being replicated tp times.
 
-  With tp=1 the buffer holds all T*k slots — exactly the paper's
-  *dropless* routing.  With tp>1 each rank's buffer is
-  ceil(T*k/tp * capacity_factor): the Stochastic Routing Warmup plus the
-  balance loss keep expert load near-uniform, so cf=2.0 drops ~nothing
-  (tracked by the `moe/dropped_frac` metric).
+* Dispatch-mode matrix (`moe_ffn(dispatch=...)`; "auto" resolves via the
+  per-arch `MoEConfig.dispatch` knob, then the defaults below):
+
+  mode       default where            expert compute               comm
+  "fused"    tp=1, interpret builds   ONE Pallas kernel            none
+                                      (kernels/grouped_matmul.
+                                      fused_moe_ffn): gather ->
+                                      grouped two-GEMM FFN ->
+                                      gated combine, custom-vjp
+                                      ragged-recompute backward
+  "ragged"   tp=1, real TPUs (until   sort + jax.lax.ragged_dot;   none
+             the ROADMAP tile sweep)  exactly dropless at tp=1
+  "batched"  tp>1, real TPUs          per-expert capacity blocks   none
+                                      + batched einsum (equal MXU
+                                      tiles per expert)
+  "ep"       tp>1, interpret builds   token all_to_all -> local    2 (+1
+                                      fused/ragged FFN on the      bwd pair)
+                                      shard's expert slice ->      all_to_all
+                                      combine all_to_all back      over tp
+
+  Capacity semantics: tp=1 buffers hold all T*k slots — exactly the
+  paper's *dropless* routing.  "batched"/"ragged" at tp>1 bound the
+  per-rank buffer by ceil(T*k/tp * capacity_factor); "ep" bounds each
+  (source, destination) shard-pair buffer by `ep_capacity` and drops
+  deterministically (earliest slots win).  The Stochastic Routing Warmup
+  plus the balance loss keep expert load near-uniform, so cf=2.0 drops
+  ~nothing (tracked by the `moe/dropped_frac` metric).
 * The always-on **shared expert** (Eq. 2) is an ordinary tensor-parallel
-  FFN fused into the same partial-sum.
+  FFN fused into the same partial-sum in every mode.
 """
 from __future__ import annotations
 
@@ -48,7 +61,7 @@ from repro import sharding
 from repro.core import router as router_lib
 from repro.kernels import ops as kops
 from repro.models import layers as L
-from repro.sharding import AxisEnv, fsdp_spec, pad_to_multiple
+from repro.sharding import AxisEnv, ep_spec, pad_to_multiple
 
 
 def padded_experts(cfg, env: AxisEnv) -> Tuple[int, int]:
@@ -69,6 +82,17 @@ def capacity(cfg, env: AxisEnv, n_tokens: int) -> int:
     return cap
 
 
+def ep_capacity(cfg, env: AxisEnv, n_tokens_local: int) -> int:
+    """Static rows per (source, destination) shard pair in the EP token
+    exchange.  Balanced routing sends T_loc*k/tp slots from each source
+    to each destination; `capacity_factor` is the headroom over that mean.
+    Slots past the pair capacity are dropped *at the source*, earliest
+    slots (token order) win — deterministic for a given routing.  tp=1
+    degenerates to the dropless T*k buffer.  Same formula as the per-rank
+    `capacity`, just fed the rank's owned token count."""
+    return capacity(cfg, env, n_tokens_local)
+
+
 def init_moe(key, cfg, env: AxisEnv):
     m = cfg.moe
     d = cfg.d_model
@@ -83,11 +107,11 @@ def init_moe(key, cfg, env: AxisEnv):
     # routed expert weights: (E_pad, d, ff_e) — experts over tp, FSDP over d
     params["we1"] = L.dense_init(ks[1], (ep, d, m.expert_d_ff), dt)
     params["we2"] = L.dense_init(ks[2], (ep, m.expert_d_ff, d), dt, out_scale)
-    specs["we1"] = fsdp_spec(env, 3, 1, 0)
-    specs["we2"] = fsdp_spec(env, 3, 2, 0)
+    specs["we1"] = ep_spec(env, 3, 1, 0)
+    specs["we2"] = ep_spec(env, 3, 2, 0)
     if cfg.mlp_act in L.GATED_ACTS:
         params["we3"] = L.dense_init(ks[3], (ep, d, m.expert_d_ff), dt)
-        specs["we3"] = fsdp_spec(env, 3, 1, 0)
+        specs["we3"] = ep_spec(env, 3, 1, 0)
     if m.n_shared_experts > 0:
         params["shared"], specs["shared"] = L.init_mlp(
             ks[4], cfg, env, d_ff=m.shared_ff, scale_out=out_scale)
@@ -165,6 +189,113 @@ def _fused_ffn_bwd(act, res, g):
 fused_ffn.defvjp(_fused_ffn_fwd, _fused_ffn_bwd)
 
 
+def _ep_moe_ffn(cfg, env: AxisEnv, params, x, w1, w2, w3, *,
+                step, rng, train):
+    """Expert-parallel dispatch: route owned tokens, all-to-all them to
+    their experts' shards, run the local fused FFN, all-to-all back.
+
+    x (T, d) replicated over tp (the SP-gathered block activation).  Rank
+    r *owns* the r-th T/tp slice: only that slice is routed here, so the
+    per-token expert FFN runs exactly once across the tp group (vs tp
+    times in the Megatron-layout modes).  Returns (y (T, d) with only the
+    owned slice non-zero — the caller's psum/reduce-scatter assembles the
+    full tensor — plus aux, metrics, n_kept, n_slots for the shared
+    telemetry tail of `moe_ffn`).
+
+    Pipeline per rank:
+      1. route the owned slice (aux stats pmean over dp AND tp — parity
+         with the tp=1 aux over the full batch);
+      2. bucket routed slots by destination shard (stable sort: earliest
+         slots win the `ep_capacity` pair budget — deterministic drops);
+      3. all_to_all the token payload + local-expert keys
+         (`kernels/ops.ep_all_to_all`: custom-vjp, so the backward is the
+         transposed all-to-all, never a recompute);
+      4. sort received rows by local expert and run the shard's expert
+         slice through the fused Pallas FFN (`fused_ffn`, gate=1) —
+         ragged composition on real TPUs until the ROADMAP tile sweep;
+      5. all_to_all the per-slot FFN outputs back and scatter-add
+         `gate * out` into the owned slice (gates stay on the source
+         side: the return payload is gate-free, keeping the combine
+         numerics identical to the tp=1 fused path).
+    """
+    m = cfg.moe
+    T, d = x.shape
+    cdt = jnp.dtype(cfg.compute_dtype)
+    tp = env.tp
+    _, e_loc = padded_experts(cfg, env)
+    T_loc = T // tp
+    r = env.tp_index()
+    x_loc = jax.lax.dynamic_slice_in_dim(x, r * T_loc, T_loc, axis=0)
+
+    # --- 1. route the owned slice (rank-decorrelated warmup noise) --------
+    rng_ep = jax.random.fold_in(rng, r) if rng is not None else None
+    top_w, top_i, aux, metrics = router_lib.route(
+        cfg, env, params["router"], x_loc, step=step, rng=rng_ep,
+        train=train, ep=True)
+
+    # --- 2. bucket slots by destination shard -----------------------------
+    S = T_loc * m.top_k
+    cap = ep_capacity(cfg, env, T_loc)
+    flat_i = top_i.reshape(-1)                     # (S,) global expert ids
+    flat_w = top_w.reshape(-1)
+    dest = flat_i // e_loc                         # owning shard per slot
+    lkey = flat_i - dest * e_loc                   # local expert there
+    order = jnp.argsort(dest)                      # stable: token order
+    sorted_dest = jnp.take(dest, order)
+    # per-destination counts/offsets via binary search over the sorted
+    # keys (O(tp log S), no (S, tp) one-hot intermediate — same pattern
+    # as kernels/ops._align_groups)
+    ids = jnp.arange(tp)
+    offsets = jnp.searchsorted(sorted_dest, ids, side="left")
+    counts = (jnp.searchsorted(sorted_dest, ids, side="right")
+              - offsets).astype(jnp.int32)
+    pos = offsets[:, None] + jnp.arange(cap)[None, :]         # (tp, cap)
+    pos_valid = (jnp.arange(cap)[None, :]
+                 < jnp.minimum(counts, cap)[:, None])
+    slot = jnp.take(order, jnp.clip(pos, 0, S - 1))           # (tp, cap)
+    tok_send = slot // m.top_k                     # owned-token per slot
+    x_send = jnp.take(x_loc, tok_send.reshape(-1), axis=0
+                      ).reshape(tp, cap, d).astype(cdt)
+    key_send = jnp.where(pos_valid, jnp.take(lkey, slot),
+                         e_loc).astype(jnp.int32)
+
+    # --- 3. token + count exchange (bf16 payload, int32 keys) -------------
+    x_recv = kops.ep_all_to_all(x_send, axis_name=env.tp_axis)
+    key_recv = env.all_to_all_tp(key_send)         # int: no grad needed
+
+    # --- 4. local expert FFN over received rows ---------------------------
+    R = tp * cap
+    keys = key_recv.reshape(-1)                    # (R,) in [0, e_loc]
+    order2 = jnp.argsort(keys)                     # stable; invalid last
+    skey = jnp.take(keys, order2)
+    valid2 = skey < e_loc
+    eids = jnp.arange(e_loc)
+    group_sizes = (jnp.searchsorted(skey, eids, side="right")
+                   - jnp.searchsorted(skey, eids, side="left")
+                   ).astype(jnp.int32)
+    xr = x_recv.reshape(R, d)
+    ones = valid2.astype(cdt)                      # gate=1: gates stay home
+    if kops.INTERPRET:
+        y_r = fused_ffn(cfg.mlp_act, xr, w1, w2, w3, order2, ones,
+                        group_sizes)
+    else:
+        xs = jnp.take(xr, order2, axis=0)
+        out = grouped_ffn(cfg, w1, w2, w3, xs, group_sizes)
+        y_r = jnp.zeros((R, d), jnp.float32).at[order2].add(
+            out.astype(jnp.float32) * ones.astype(jnp.float32)[:, None])
+
+    # --- 5. combine exchange + gated scatter into the owned slice ---------
+    y_back = kops.ep_all_to_all(y_r.astype(cdt).reshape(tp, cap, d),
+                                axis_name=env.tp_axis)
+    gates = jnp.where(pos_valid, jnp.take(flat_w, slot), 0.0).astype(cdt)
+    y_loc = jnp.zeros((T_loc, d), cdt).at[tok_send.reshape(-1)].add(
+        y_back.reshape(R, d) * gates.reshape(R)[:, None])
+    y = jax.lax.dynamic_update_slice_in_dim(
+        jnp.zeros((T, d), cdt), y_loc, r * T_loc, axis=0)
+    n_kept = jnp.sum(pos_valid)
+    return y, aux, metrics, n_kept, jnp.int32(S)
+
+
 def expert_capacity(cfg, env: AxisEnv, n_tokens: int) -> int:
     """Per-EXPERT dispatch rows for the batched path (global semantics:
     C_e = T*k*cf/E, so total rows match the per-rank ragged capacity)."""
@@ -196,27 +327,62 @@ def moe_ffn(cfg, env: AxisEnv, params, x: jax.Array, *,
       "batched" per-expert-capacity blocks + plain batched einsum — the
                 TPU-native form (equal MXU tiles per expert, no waste);
                 drops are bounded per-expert instead of per-rank;
-      "auto"    tp>1: batched.  tp=1: fused where validated (interpret
-                builds), ragged on real TPU hardware until the fused
-                kernel tiles its (T, d) blocks (ROADMAP follow-up).
+      "ep"      expert-parallel all-to-all dispatch (`_ep_moe_ffn`): each
+                rank routes its T/tp owned tokens, all_to_all's the slots
+                to the shard owning each expert, runs the local fused FFN
+                there, and all_to_all's the outputs back.  Per-token FFN
+                compute happens once per tp group instead of tp times;
+                requires T % tp == 0 (slice ownership).
+      "auto"    resolves the per-arch `MoEConfig.dispatch` knob first,
+                then: tp>1: ep on interpret builds when T % tp == 0 (the
+                multi-device fused hot path), batched otherwise/on real
+                TPUs.  tp=1: fused where validated (interpret builds),
+                ragged on real TPU hardware until the fused kernel tiles
+                its (T, d) blocks (ROADMAP follow-up).
     """
     m = cfg.moe
     T, d = x.shape
     cdt = jnp.dtype(cfg.compute_dtype)
     ep, e_loc = padded_experts(cfg, env)
     cap = capacity(cfg, env, T)
+    explicit = dispatch != "auto"
     if dispatch == "auto":
-        # fused is the tp=1 default where the pipeline is validated
+        dispatch = m.dispatch              # per-arch config knob
+        if dispatch == "ep" and env.tp == 1:
+            dispatch = "auto"   # EP buys nothing at tp=1: use tp=1 default
+    if dispatch == "auto":
+        # fused/ep are the defaults where the pipeline is validated
         # (interpret mode).  On real TPUs the kernel as written keeps the
         # full (T, d) in/out blocks VMEM-resident, which does not fit at
-        # training shapes — stay on ragged there until the ROADMAP tile
-        # sweep (T-tiled output + DMA gather) lands.
+        # training shapes — stay on ragged/batched there until the ROADMAP
+        # tile sweep (T-tiled output + DMA gather) lands.
         if env.tp > 1:
-            dispatch = "batched"
+            dispatch = ("ep" if kops.INTERPRET and T % env.tp == 0
+                        else "batched")
         else:
             dispatch = "fused" if kops.INTERPRET else "ragged"
-    if dispatch not in ("fused", "ragged", "batched"):
+    if dispatch not in ("fused", "ragged", "batched", "ep"):
         raise ValueError(f"unknown moe dispatch mode: {dispatch!r}")
+    if dispatch == "ep" and T % env.tp:
+        # slice ownership needs T % tp == 0 (e.g. tiny decode batches):
+        # an explicit caller request is an error, the config-knob
+        # preference degrades to the Megatron-layout capacity path.
+        if explicit:
+            raise ValueError(
+                f"dispatch='ep' needs T ({T}) divisible by tp ({env.tp})")
+        dispatch = "batched"
+
+    w1 = env.gather_fsdp(params["we1"], 1, dtype=cdt)
+    w2 = env.gather_fsdp(params["we2"], 2, dtype=cdt)
+    w3 = (env.gather_fsdp(params["we3"], 1, dtype=cdt)
+          if "we3" in params else None)
+
+    if dispatch == "ep":
+        y, aux, metrics, n_kept, n_local = _ep_moe_ffn(
+            cfg, env, params, x, w1, w2, w3, step=step, rng=rng,
+            train=train)
+        return _moe_tail(cfg, env, params, x, y, aux, metrics, n_kept,
+                         n_local)
 
     top_w, top_i, aux, metrics = router_lib.route(
         cfg, env, params["router"], x, step=step, rng=rng, train=train)
@@ -230,11 +396,6 @@ def moe_ffn(cfg, env: AxisEnv, params, x: jax.Array, *,
     is_local = (local_key >= 0) & (local_key < e_loc)
     sort_key = jnp.where(is_local, local_key, e_loc)   # non-local last
     order = jnp.argsort(sort_key)                  # stable
-
-    w1 = env.gather_fsdp(params["we1"], 1, dtype=cdt)
-    w2 = env.gather_fsdp(params["we2"], 2, dtype=cdt)
-    w3 = (env.gather_fsdp(params["we3"], 1, dtype=cdt)
-          if "we3" in params else None)
 
     if dispatch in ("ragged", "fused"):
         sel = order[:cap]                          # (cap,) slot indices
@@ -283,8 +444,18 @@ def moe_ffn(cfg, env: AxisEnv, params, x: jax.Array, *,
             (out * gates[..., None]).reshape(-1, d))
         n_kept = jnp.sum(jnp.minimum(counts, c_e))
 
-    # dropped-token telemetry (paper: dropless; cf headroom makes this ~0)
     n_local = jnp.sum(is_local)
+    return _moe_tail(cfg, env, params, x, y, aux, metrics, n_kept, n_local)
+
+
+def _moe_tail(cfg, env: AxisEnv, params, x, y, aux, metrics, n_kept,
+              n_local):
+    """Shared by every dispatch mode: dropped-token telemetry + the
+    always-on shared expert fused into the same partial-sum."""
+    m = cfg.moe
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    # dropped-token telemetry (paper: dropless; cf headroom makes this ~0)
     dropped = jnp.maximum(n_local - n_kept, 0)
     metrics["moe/dropped_frac"] = env.pmean_dp(
         env.psum_tp(dropped.astype(jnp.float32))

@@ -32,7 +32,7 @@ def init_router(key, cfg, env: AxisEnv):
 
 def stochastic_warmup_logits(logits: jax.Array, step: jax.Array,
                              warmup_steps: int, rng: jax.Array,
-                             env: AxisEnv) -> jax.Array:
+                             env: AxisEnv, pmean=None) -> jax.Array:
     """Eq. (3): s_hat = alpha*s + (1-alpha)*(mu_s + sigma_s * eps).
 
     mu_s/sigma_s are *scalar* statistics of the logit distribution (over
@@ -40,10 +40,12 @@ def stochastic_warmup_logits(logits: jax.Array, step: jax.Array,
     experts, which is what guarantees "balanced expert activation at
     initialization" even when the learned router starts skewed.  (Per-
     expert stats would reproduce the skew in the noise and defeat the
-    warmup.)  pmean over dp gives the cross-worker running estimate.
+    warmup.)  `pmean` averages over every axis the tokens are sharded on —
+    dp by default, dp+tp under EP dispatch (tokens sharded over tp too).
     """
-    mu = env.pmean_dp(jnp.mean(logits))
-    var = env.pmean_dp(jnp.mean((logits - mu) ** 2))
+    pmean = pmean or env.pmean_dp
+    mu = pmean(jnp.mean(logits))
+    var = pmean(jnp.mean((logits - mu) ** 2))
     mu = jax.lax.stop_gradient(mu)
     sigma = jax.lax.stop_gradient(jnp.sqrt(var + 1e-6))
     alpha = jnp.minimum(step.astype(jnp.float32) / max(warmup_steps, 1), 1.0)
@@ -54,17 +56,27 @@ def stochastic_warmup_logits(logits: jax.Array, step: jax.Array,
 def route(cfg, env: AxisEnv, params, x: jax.Array, *,
           step: Optional[jax.Array] = None,
           rng: Optional[jax.Array] = None,
-          train: bool = True
+          train: bool = True,
+          ep: bool = False
           ) -> Tuple[jax.Array, jax.Array, jax.Array, Dict[str, jax.Array]]:
-    """x (T, d) -> (top_w (T,k), top_i (T,k), aux_loss, metrics)."""
+    """x (T, d) -> (top_w (T,k), top_i (T,k), aux_loss, metrics).
+
+    `ep=True` means x holds only this tp rank's *owned* token slice
+    (expert-parallel dispatch): the per-token statistics behind the balance
+    loss, z-loss and warmup noise then average over dp AND tp so the aux
+    loss is bitwise-identical on every rank and numerically matches the
+    tp=1 value computed over the full batch.
+    """
     m = cfg.moe
+    pmean = env.pmean_all if ep else env.pmean_dp
     wr = env.gather_fsdp(params["wr"], 0).astype(jnp.float32)
     logits = x.astype(jnp.float32) @ wr                    # (T, E)
 
     if train and rng is not None and m.router_warmup_steps > 0:
         assert step is not None
         logits = stochastic_warmup_logits(logits, step,
-                                          m.router_warmup_steps, rng, env)
+                                          m.router_warmup_steps, rng, env,
+                                          pmean=pmean)
 
     probs = jax.nn.softmax(logits, axis=-1)
     top_w, top_i = jax.lax.top_k(probs, m.top_k)           # Eq. (1)
@@ -73,12 +85,12 @@ def route(cfg, env: AxisEnv, params, x: jax.Array, *,
     # load-balance (Switch): E * sum_e f_e * P_e
     E = m.n_experts
     hits = jax.nn.one_hot(top_i, E, dtype=jnp.float32).sum(axis=1)  # (T, E)
-    f = env.pmean_dp(jnp.mean(hits, axis=0)) / m.top_k     # fraction routed
-    p_mean = env.pmean_dp(jnp.mean(probs, axis=0))
+    f = pmean(jnp.mean(hits, axis=0)) / m.top_k            # fraction routed
+    p_mean = pmean(jnp.mean(probs, axis=0))
     balance = E * jnp.sum(f * p_mean)
     # router z-loss: mean(logsumexp(logits)^2)
     z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
-    z = env.pmean_dp(z)
+    z = pmean(z)
     aux = m.balance_loss_coef * balance + m.z_loss_coef * z
 
     metrics = {

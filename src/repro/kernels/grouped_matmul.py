@@ -31,17 +31,25 @@ Two kernels live here:
    DMA.  This is why core/moe.py only defaults to "fused" on interpret
    builds.
 
-Dispatch-mode guidance (see core/moe.py for the model-level view):
+Dispatch-mode guidance (see core/moe.py for the model-level view; docs/
+kernels.md for the tiling contract):
   * "fused"   — this pipeline; wins whenever the MoE FFN is HBM-bound
                 (it always is at inference batch sizes, and at training
                 shapes once d_ff is small relative to d, the fine-grained
-                expert regime of §3.2.1).
+                expert regime of §3.2.1).  Default at tp=1 on interpret
+                builds.
   * "ragged"  — jax.lax.ragged_dot composition; exact dropless reference,
                 but backends without a grouped-GEMM lowering compute it
-                as E_loc dense GEMMs.
+                as E_loc dense GEMMs.  Default at tp=1 on real TPUs.
   * "batched" — per-expert capacity blocks + batched einsum; equal MXU
                 tiles per expert, the right form when drops are bounded
-                per-expert (tp > 1).
+                per-expert.  Default at tp>1 on real TPUs.
+  * "ep"      — expert-parallel all-to-all dispatch (core/moe.py): tokens
+                travel to the shard owning their expert and THIS fused
+                kernel runs on each shard's expert slice over the received
+                rows.  Default at tp>1 on interpret builds; the kernel is
+                layout-oblivious — EP just feeds it (tp*cap, d) received
+                rows instead of the rank's own (T, d).
 
 All kernels use fp32 VMEM accumulators regardless of input dtype.
 """

@@ -139,6 +139,46 @@ def moe_fused_ffn(x, w1, w2, w3, tok, gate, group_sizes, *,
                              act=act, bf=bf_, interpret=interpret)
 
 
+# ---------------------------------------------------------------------------
+# EP token exchange: custom-vjp all-to-all for the expert-parallel MoE path
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _ep_a2a(axis_name, x):
+    return jax.lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0,
+                              tiled=False)
+
+
+def _ep_a2a_fwd(axis_name, x):
+    return _ep_a2a(axis_name, x), None
+
+
+def _ep_a2a_bwd(axis_name, _res, g):
+    # The exchange permutes blocks as out[dst][src] = in[src][dst] — an
+    # involution, so its transpose is the SAME all-to-all: each cotangent
+    # block travels straight back to the rank that sent the activation.
+    return (_ep_a2a(axis_name, g),)
+
+
+_ep_a2a.defvjp(_ep_a2a_fwd, _ep_a2a_bwd)
+
+
+def ep_all_to_all(x, *, axis_name: str):
+    """Expert-parallel token exchange over a mesh axis.
+
+    x (tp, cap, ...): block j is this rank's payload addressed to rank j.
+    Returns (tp, cap, ...) where block s arrived from rank s.  The
+    custom-vjp pins the backward pass to exactly the transposed
+    all-to-all — gradient blocks retrace the forward routes, backward
+    communication volume equals forward volume — as an explicit contract
+    of the EP hot path, independent of how upstream lowers the
+    primitive's transpose.  (Reverse-mode only: training never needs
+    jvp through the dispatch.)
+    """
+    return _ep_a2a(axis_name, x)
+
+
 @functools.partial(jax.jit, static_argnames=("bt", "bv", "bk", "interpret"))
 def normhead_logits(x, w, *, bt: int = 128, bv: int = 128, bk: int = 128,
                     interpret: bool | None = None):

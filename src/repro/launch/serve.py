@@ -20,19 +20,22 @@ from repro import api
 from repro.configs.base import get_config, get_smoke_config
 from repro.launch.mesh import make_local_mesh
 from repro.models import model as M
-from repro.serving.flood import FloodEngine, GenRequest, baseline_step_engine
+from repro.serving.flood import (FloodEngine, GenRequest,
+                                 baseline_step_engine, quantize_microbatch)
 from repro.serving.segment_cache import SegmentCache
 
 
 def build_model_engine(cfg, mesh, n_stages: int, seq_len: int,
-                       batch: int):
+                       batch: int, flags: M.RunFlags = M.DEFAULT_FLAGS):
     """Real-model Flood engine: layers split into n_stages jitted chunks.
 
     Stage state carries (x, caches_slice, pos); decode math is exactly the
-    model's block_decode.
+    model's block_decode.  `flags.moe_dispatch` selects the MoE decode
+    path — with tp > 1 and "ep" the decode batch routes tokens over the
+    mesh through the same all-to-all dispatch training uses.
     """
     runner = api.Runner(cfg, mesh, fsdp=False, seq_parallel=False,
-                        max_seq=seq_len)
+                        max_seq=seq_len, flags=flags)
     params = runner.init_params(0)
     decode, _ = runner.make_decode_step(batch, seq_len)
     decode = jax.jit(decode)
@@ -72,10 +75,19 @@ def main():
     ap.add_argument("--stages", type=int, default=2)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--baseline", action="store_true")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tp mesh width (needs that many jax devices, e.g. "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--moe-dispatch", default="auto",
+                    choices=["auto", "fused", "ragged", "batched", "ep"],
+                    help="MoE decode dispatch; 'ep' routes decode batches "
+                         "over the mesh via the all-to-all expert-parallel "
+                         "path (requires microbatch %% tp == 0)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    mesh = make_local_mesh(1, 1)
+    mesh = make_local_mesh(1, args.tp)
+    flags = M.RunFlags(moe_dispatch=args.moe_dispatch)
     rs = np.random.RandomState(0)
     reqs = [GenRequest(rid=i,
                        prompt=rs.randint(0, cfg.vocab_size,
@@ -83,8 +95,9 @@ def main():
                        max_new=args.max_new)
             for i in range(args.requests)]
 
+    micro = quantize_microbatch(args.microbatch, args.tp)
     embed_fn, stage_fns, head_fn = build_model_engine(
-        cfg, mesh, args.stages, args.seq, args.microbatch)
+        cfg, mesh, args.stages, args.seq, micro, flags=flags)
 
     if args.baseline:
         stats = baseline_step_engine(head_fn, embed_fn, reqs)
@@ -93,7 +106,7 @@ def main():
                           cache=SegmentCache(max_tokens=1 << 16,
                                              initial_segment=32,
                                              extend_chunk=32),
-                          microbatch=args.microbatch)
+                          microbatch=micro, batch_multiple=args.tp)
         eng.submit(reqs)
         stats = eng.run()
         print("cache stats:", eng.cache.stats)

@@ -34,9 +34,12 @@ class RunFlags:
     remat: bool = True
     loss_chunk: int = 2048
     attn_block: int = 1024
-    # "fused" | "ragged" | "batched" | "auto" (auto: batched at tp>1;
-    # at tp=1 the fused Pallas MoE pipeline on interpret builds, ragged
-    # on real TPUs — see core/moe.py::moe_ffn)
+    # "fused" | "ragged" | "batched" | "ep" | "auto".  "auto" defers to
+    # the per-arch MoEConfig.dispatch knob, then the runtime heuristic
+    # (interpret builds: fused at tp=1, expert-parallel all-to-all "ep"
+    # at tp>1; real TPUs: ragged/batched) — see core/moe.py::moe_ffn.
+    # Threaded through train, prefill AND decode (block_decode), so
+    # serving batches exercise the same dispatch path as training.
     moe_dispatch: str = "auto"
     rwkv_chunk: int = 0                # >0: chunked-parallel WKV6
 
@@ -173,7 +176,7 @@ def block_forward(cfg: ModelConfig, env: AxisEnv, params, x_sp, *,
 
 
 def block_decode(cfg, env: AxisEnv, params, x, cache, pos, *, kind: str,
-                 ffn: str):
+                 ffn: str, flags: RunFlags = DEFAULT_FLAGS):
     """x (B, d) replicated over tp; cache per-kind dict."""
     h = L.apply_norm(cfg, env, params["norm1"], x)
     if kind in ("attn", "swa"):
@@ -202,7 +205,8 @@ def block_decode(cfg, env: AxisEnv, params, x, cache, pos, *, kind: str,
         x = x + gate * env.psum_tp(partial)
     elif ffn == "moe":
         partial, _, _ = moe_lib.moe_ffn(cfg, env, params["moe"], h,
-                                        train=False)
+                                        train=False,
+                                        dispatch=flags.moe_dispatch)
         x = x + env.psum_tp(partial)
     else:
         x = x + env.psum_tp(L.apply_mlp(cfg, env, params["mlp"], h))
@@ -461,7 +465,8 @@ def init_caches(cfg: ModelConfig, env: AxisEnv, B_loc: int, seq_len: int,
 
 
 def decode_step(cfg: ModelConfig, env: AxisEnv, params, caches,
-                token: jax.Array, pos: jax.Array):
+                token: jax.Array, pos: jax.Array,
+                flags: RunFlags = DEFAULT_FLAGS):
     """One greedy decode step.  token (B_loc,) -> (next (B_loc,), caches)."""
     denv = dataclasses.replace(env, seq_parallel=False)
     x = emb.embed_tokens(cfg, denv, params["embed"], token)   # (B, d)
@@ -477,7 +482,7 @@ def decode_step(cfg: ModelConfig, env: AxisEnv, params, caches,
         def body(x, inp):
             lp, cache = inp
             x, cache = block_decode(cfg, denv, lp, x, cache, pos,
-                                    kind=kind, ffn=ffn)
+                                    kind=kind, ffn=ffn, flags=flags)
             return x, cache
 
         x, caches = jax.lax.scan(body, x, (params["blocks"], caches))
@@ -485,7 +490,8 @@ def decode_step(cfg: ModelConfig, env: AxisEnv, params, caches,
         new_caches = []
         for i, lp in enumerate(params["blocks"]):
             x, c = block_decode(cfg, denv, lp, x, caches[i], pos,
-                                kind=cfg.block_kind(i), ffn=_ffn_kind(cfg, i))
+                                kind=cfg.block_kind(i), ffn=_ffn_kind(cfg, i),
+                                flags=flags)
             new_caches.append(c)
         caches = new_caches
     x = L.apply_norm(cfg, denv, params["final_norm"], x)

@@ -31,6 +31,16 @@ import numpy as np
 from repro.serving.segment_cache import SegmentCache
 
 
+def quantize_microbatch(n: int, multiple: int) -> int:
+    """Round a micro-batch size up to a multiple.  The expert-parallel
+    MoE decode path (core/moe.py dispatch="ep") slices token ownership
+    over the tp mesh axis, so decode batches must satisfy B % tp == 0 —
+    the single place both the engine and its callers quantize from."""
+    if multiple > 1 and n % multiple:
+        n += multiple - n % multiple
+    return n
+
+
 @dataclasses.dataclass
 class GenRequest:
     rid: int
@@ -69,12 +79,17 @@ class FloodEngine:
 
     def __init__(self, stage_fns: Sequence[Callable], head_fn: Callable,
                  embed_fn: Callable, *, cache: Optional[SegmentCache] = None,
-                 microbatch: int = 8):
+                 microbatch: int = 8, batch_multiple: int = 1):
+        """`batch_multiple` quantizes the micro-batch size via
+        `quantize_microbatch` (EP decode constraint: B % tp == 0); pass
+        batch_multiple=tp and the scheduler rounds the micro-batch up
+        (embed_fn pads the tail).  Callers that compile a fixed decode
+        batch must quantize with the same helper."""
         self.stage_fns = list(stage_fns)
         self.head_fn = head_fn
         self.embed_fn = embed_fn
         self.S = len(self.stage_fns)
-        self.micro = microbatch
+        self.micro = quantize_microbatch(microbatch, batch_multiple)
         self.cache = cache or SegmentCache(max_tokens=1 << 20)
         self.pending: Deque[GenRequest] = deque()
         self.stats = PipelineStats(stage_busy=np.zeros(self.S))

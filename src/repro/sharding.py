@@ -11,6 +11,21 @@ Axis roles:
 Sequence parallelism (SP) reuses the tp axis for activations between blocks,
 and FSDP reuses the dp axes for parameter storage (ZeRO-3 style), so the
 same 2-3 axis mesh expresses DP x TP x SP x FSDP x EP.
+
+Expert parallelism (EP) also reuses the tp axis: routed-expert weights are
+sharded over 'model' on their leading (expert) dim (`ep_spec`), and the
+``dispatch="ep"`` MoE path (core/moe.py) exchanges *tokens* over that same
+axis with `all_to_all_tp` instead of replicating every token's FFN compute
+on every rank.  The dispatch-mode matrix (who computes what, and where the
+combine happens):
+
+  mode       token layout per tp rank     expert compute      combine
+  "unfused"/ all T tokens (replicated)    local experts,      psum /
+  "ragged"/  — Megatron layout            all T tokens        reduce-scatter
+  "batched"                                                   (SP boundary)
+  "ep"       T/tp owned tokens; routed    local experts,      return
+             slots all_to_all'ed to the   received tokens     all_to_all +
+             owning expert shard          only                local scatter
 """
 from __future__ import annotations
 
@@ -80,6 +95,15 @@ class AxisEnv:
 
     def all_gather_tp(self, x, axis=0):
         return jax.lax.all_gather(x, self.tp_axis, axis=axis, tiled=True)
+
+    def all_to_all_tp(self, x, split_axis=0, concat_axis=0):
+        """Blocked all-to-all over tp: x (tp, ...) -> (tp, ...) where
+        out[s] is the block rank s addressed to this rank.  This is the EP
+        token exchange primitive; its transpose (for autodiff) is itself —
+        see kernels/ops.ep_all_to_all for the custom-vjp wrapper the MoE
+        dispatch path uses."""
+        return jax.lax.all_to_all(x, self.tp_axis, split_axis=split_axis,
+                                  concat_axis=concat_axis, tiled=False)
 
     def scatter_tp(self, x, axis=0):
         """reduce-scatter over tp (inverse of all_gather_tp under +)."""
@@ -199,6 +223,17 @@ def fsdp_spec(env: AxisEnv, ndim: int, fsdp_dim: Optional[int],
     if tp_dim is not None:
         parts[tp_dim] = env.tp_axis
     return P(*parts)
+
+
+def ep_spec(env: AxisEnv, ndim: int, fsdp_dim: Optional[int],
+            expert_dim: int = 0) -> P:
+    """Spec for an expert-parallel weight: the expert dim is sharded over
+    the tp ('model') axis — rank r owns experts [r*E_loc, (r+1)*E_loc) —
+    and one non-expert dim may additionally be FSDP-sharded over dp.
+    Identical mechanics to `fsdp_spec` with tp on the expert dim; the
+    separate name records the *role*: these shards are addressed by the
+    EP all-to-all token exchange, not by a column/row-parallel matmul."""
+    return fsdp_spec(env, ndim, fsdp_dim, expert_dim)
 
 
 def batch_spec(env: AxisEnv, ndim: int, batch_dim: int = 0) -> P:
