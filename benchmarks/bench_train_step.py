@@ -1,0 +1,105 @@
+"""Training-engine step-time bench: the mesh-native train step with and
+without buffer donation and microbatch grad accumulation (same tokens per
+optimizer step in every variant), plus the host-sync cost of the legacy
+per-step `float(loss)` loop vs the engine's async dispatch.
+
+Variants (ling-lite smoke, tp=1, interpret kernels):
+  classic        no donation, no accumulation, per-step host sync on loss
+  donate         donated params/opt/guard, async dispatch
+  accum          2-microbatch lax.scan accumulation, no donation
+  donate+accum   the engine default
+
+Writes the committed trajectory artifact ``BENCH_train_step.json`` at the
+repo root (plus the harness's experiments/bench/train_step.json detail).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _steps(step_fn, state, batch, n, *, sync_each):
+    """Run n chained steps; sync per step (legacy loop) or once at the
+    end (engine's async dispatch)."""
+    for t in range(n):
+        state = step_fn(state, batch, t)
+        if sync_each:
+            float(state[-1]["loss"])
+    jax.block_until_ready(state[:-1])
+    return state
+
+
+def run(fast=False):
+    from repro import api
+    from repro.configs.base import get_smoke_config
+    from repro.core import spikes
+    from repro.launch.mesh import make_local_mesh
+    from repro.optim import adamw
+
+    cfg = get_smoke_config("ling-lite")
+    S, A, Bm = 64, 2, 2
+    B = A * Bm                      # total tokens/optimizer step is fixed
+    n, warmup = (3, 1) if fast else (6, 2)
+    runner = api.Runner(cfg, make_local_mesh(1, 1), max_seq=S)
+    rs = np.random.RandomState(0)
+    toks = rs.randint(0, cfg.vocab_size, (A, Bm, S)).astype(np.int32)
+    labs = rs.randint(0, cfg.vocab_size, (A, Bm, S)).astype(np.int32)
+    flat = {"tokens": jnp.asarray(toks.reshape(B, S)),
+            "labels": jnp.asarray(labs.reshape(B, S))}
+    stacked = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labs)}
+
+    def build(donate, accum):
+        step = runner.jit_train_step(
+            Bm if accum else B, accum_steps=A if accum else 1,
+            spike_guard=spikes.SpikeConfig(), donate=donate)
+
+        def fn(state, batch, t):
+            p, o, g, _ = state
+            return step(p, o, g, batch, jnp.int32(t),
+                        jax.random.PRNGKey(t), jnp.float32(1e-3))
+
+        return fn
+
+    variants = {
+        "classic": (False, False, True),
+        "donate": (True, False, False),
+        "accum": (False, True, False),
+        "donate_accum": (True, True, False),
+    }
+    rows, out = [], {}
+    for name, (donate, accum, sync_each) in variants.items():
+        fn = build(donate, accum)
+        batch = stacked if accum else flat
+
+        def fresh():
+            p = runner.init_params(0)
+            return (p, adamw.init_opt_state(p), spikes.init_guard_state(),
+                    {"loss": jnp.float32(0)})
+
+        state = _steps(fn, fresh(), batch, warmup, sync_each=sync_each)
+        t0 = time.perf_counter()
+        state = _steps(fn, state, batch, n, sync_each=sync_each)
+        us = (time.perf_counter() - t0) / n * 1e6
+        out[name + "_us_per_step"] = us
+        rows.append((f"train_step_{name}", f"{us:.0f}",
+                     f"B{B}xS{S}_accum{A if accum else 1}"
+                     f"{'_donated' if donate else ''}"))
+
+    detail = {
+        "bench": "mesh-native train step: donation x accumulation x "
+                 "host-sync",
+        "arch": "ling-lite-smoke", "batch": B, "seq": S,
+        "accum_steps": A, "steps_timed": n, **out,
+    }
+    with open(os.path.join(ROOT, "BENCH_train_step.json"), "w") as f:
+        json.dump({**detail, "date": time.strftime("%Y-%m-%d"),
+                   "command": "PYTHONPATH=src python -m benchmarks.run "
+                              "--only train_step"}, f, indent=1)
+    return rows, detail

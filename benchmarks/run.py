@@ -18,6 +18,7 @@ Paper artifacts covered:
   fig12_13_scaling   hyper-param + loss scaling laws, MoE efficiency lever
   fig14_spikes       loss-spike skip + sample-retry training comparison
   kernels            Pallas kernel micro-timings (interpret mode)
+  train_step         engine step time: donation x accumulation x host-sync
   roofline           §Dry-run/§Roofline table from experiments/dryrun/
 """
 from __future__ import annotations
@@ -32,7 +33,7 @@ BENCHES = [
     "fig4_xputimer", "fig8_edit", "table2_pcache", "babel_metadata",
     "babel_crc", "table3_flood", "dpo_packing", "table1_hetero",
     "fig12_13_scaling", "fig14_spikes", "fig18_eval", "kernels",
-    "roofline",
+    "train_step", "roofline",
 ]
 
 

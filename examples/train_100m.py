@@ -1,6 +1,8 @@
 """End-to-end driver: train a ~100M-param Ling-style MoE for a few hundred
-steps with the full recipe — WSD schedule, batch-size warmup, spike
-skip/retry, XPUTimer tracing, PCache checkpoints.
+steps with the full engine — sharded donated train step, microbatch grad
+accumulation, device-side spike guard with async metric drains, WSD
+schedule, XPUTimer tracing, async PCache checkpoints (--resume continues
+the newest one).
 
     PYTHONPATH=src python examples/train_100m.py [--steps 300] [--tiny]
 
@@ -21,6 +23,10 @@ from repro.training.trainer import TrainConfig, Trainer
 ap = argparse.ArgumentParser()
 ap.add_argument("--steps", type=int, default=300)
 ap.add_argument("--tiny", action="store_true")
+ap.add_argument("--accum", type=int, default=1,
+                help="microbatches accumulated per optimizer step")
+ap.add_argument("--resume", action="store_true",
+                help="resume from the newest checkpoint")
 ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
 args = ap.parse_args()
 
@@ -47,11 +53,19 @@ trainer = Trainer(
     TrainConfig(n_steps=args.steps,
                 lr_schedule=WSDSchedule(max_lr=6e-4, warmup_steps=30,
                                         total_steps=args.steps),
+                accum_steps=args.accum,
                 checkpoint_dir=args.checkpoint_dir, checkpoint_every=100,
                 log_every=10),
     timer=XPUTimer())
+if args.resume:
+    print(f"resumed from {trainer.restore('latest')} at step {trainer.step}")
 hist = trainer.train()
+trainer.close()
 rep = trainer.timer.diagnose()
-print(f"final loss {hist[-1]['loss']:.4f}; spikes skipped: "
-      f"{rep['counters'].get('spike_skipped', 0)}")
-print(f"dominant span: {rep['dominant_span']}")
+if hist:
+    print(f"final loss {hist[-1]['loss']:.4f}; spikes skipped: "
+          f"{rep['counters'].get('spike_skipped', 0)}; metric drains: "
+          f"{trainer.metric_drains} over {len(hist)} steps")
+    print(f"dominant span: {rep.get('dominant_span')}")
+else:
+    print("no steps ran (schedule already complete)")

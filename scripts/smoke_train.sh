@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# CI smoke for the mesh-native training engine: a tiny ling-lite run on
+# one device, then the same run data-parallel on two forced host devices
+# (dp=2 exercises the sharded/donated step + FSDP specs end-to-end).
+#
+#     bash scripts/smoke_train.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== smoke: dp=1 tp=1 (accum=2, device spike guard, donation) =="
+python -m repro.launch.train --arch ling-lite --smoke \
+    --steps 5 --batch 4 --seq 64 --accum 2
+
+echo "== smoke: dp=2 tp=1 (2 forced host devices) =="
+XLA_FLAGS="--xla_force_host_platform_device_count=2 ${XLA_FLAGS:-}" \
+python -m repro.launch.train --arch ling-lite --smoke \
+    --steps 5 --batch 4 --seq 64 --dp 2
+
+echo "smoke_train OK"

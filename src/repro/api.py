@@ -13,6 +13,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import spikes as spikes_lib
 from repro.models import model as M
 from repro.optim import adamw
 from repro import sharding
@@ -96,34 +97,122 @@ class Runner:
 
     # -- train step ------------------------------------------------------------
     def make_train_step(self, global_batch: int,
-                        opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig()):
+                        opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
+                        *, accum_steps: int = 1,
+                        spike_guard: Optional["spikes_lib.SpikeConfig"] = None):
+        """Mesh-native train step (params/opt sharded per the spec trees,
+        EP-aware for expert weights).
+
+        Default (``accum_steps=1``, no guard) keeps the classic signature
+        ``(params, opt, batch, step, rng, lr) -> (params, opt, metrics)``.
+
+        ``accum_steps > 1``
+            The batch carries a leading microbatch dim — leaves are
+            ``(accum, B, S)`` with ``B`` the per-microbatch global batch —
+            and a ``lax.scan`` inside the jitted step accumulates fp32
+            grads over the microbatches before one optimizer update.
+
+        ``spike_guard=SpikeConfig(...)``
+            The step carries a small replicated device-side state
+            (`spikes.init_guard_state`) and gates the params/opt commit on
+            a `commit` flag computed from the EMA loss statistic — §3.4.4
+            skip with no per-step host sync.  Signature becomes
+            ``(params, opt, guard, batch, step, rng, lr) ->
+            (params, opt, guard, metrics)`` and ``metrics['commit']`` is
+            1.0/0.0.  Callers should jit with ``donate_argnums=(0, 1, 2)``
+            so params/opt/guard update in place (see `jit_train_step`).
+        """
         cfg, env, flags = self.cfg, self.env, self.flags
         pspecs, mesh_sizes = self.specs, self.mesh_sizes
         bspecs = self.train_batch_specs(global_batch)
+        if accum_steps > 1:
+            bspecs = {k: P(None, *s) for k, s in bspecs.items()}
         ospecs = adamw.opt_state_specs(pspecs)
 
-        def step_fn(params, opt_state, batch, step, rng, lr):
-            rng = jax.random.fold_in(rng, jax.lax.axis_index(env.dp_axes))
-
+        def loss_and_grads(params, batch, step, rng):
             def lf(p):
                 return M.loss_fn(cfg, env, p, batch, step=step, rng=rng,
                                  flags=flags)
+            return jax.value_and_grad(lf, has_aux=True)(params)
 
-            (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(
-                params)
+        def accum_loss_and_grads(params, batch, step, rng):
+            """fp32 grad accumulation over the leading microbatch dim,
+            as a scan so peak memory stays one microbatch."""
+            def body(g_acc, k):
+                mb = jax.tree.map(lambda v: v[k], batch)
+                (loss, mets), g = loss_and_grads(
+                    params, mb, step, jax.random.fold_in(rng, k))
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return g_acc, (loss, mets)
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            g_acc, (losses, mets) = jax.lax.scan(
+                body, g0, jnp.arange(accum_steps))
+            grads = jax.tree.map(lambda g: g / accum_steps, g_acc)
+            return ((jnp.mean(losses),
+                     jax.tree.map(lambda v: jnp.mean(v, axis=0), mets)),
+                    grads)
+
+        def core(params, opt_state, guard_state, batch, step, rng, lr):
+            rng = jax.random.fold_in(rng, jax.lax.axis_index(env.dp_axes))
+            la_g = accum_loss_and_grads if accum_steps > 1 else loss_and_grads
+            (loss, metrics), grads = la_g(params, batch, step, rng)
             grads = adamw.reduce_replicated_grads(grads, pspecs, env)
             gnorm = adamw.global_grad_norm(grads, pspecs, env, mesh_sizes)
             scale = jnp.minimum(1.0, opt_cfg.clip_norm
                                 / jnp.maximum(gnorm, 1e-12))
+            commit = None
+            if spike_guard is not None:
+                # loss is the psum'd global loss -> identical on every
+                # rank, so the replicated guard state stays consistent.
+                commit, guard_state = spikes_lib.guard_commit(
+                    spike_guard, guard_state, loss)
             params, opt_state = adamw.apply_updates(
-                params, grads, opt_state, lr, opt_cfg, grad_scale=scale)
+                params, grads, opt_state, lr, opt_cfg, grad_scale=scale,
+                commit=commit)
             metrics = dict(metrics, **{"grad_norm": gnorm, "loss": loss})
-            return params, opt_state, metrics
+            if commit is not None:
+                metrics["commit"] = commit.astype(jnp.float32)
+            return params, opt_state, guard_state, metrics
 
-        n_metrics_specs = P()
-        in_specs = (pspecs, ospecs, bspecs, P(), P(), P())
-        out_specs = (pspecs, ospecs, n_metrics_specs)
-        return _shard_map(step_fn, self.mesh, in_specs, out_specs)
+        if spike_guard is None:
+            def step_fn(params, opt_state, batch, step, rng, lr):
+                params, opt_state, _, metrics = core(
+                    params, opt_state, None, batch, step, rng, lr)
+                return params, opt_state, metrics
+
+            in_specs = (pspecs, ospecs, bspecs, P(), P(), P())
+            out_specs = (pspecs, ospecs, P())
+            return _shard_map(step_fn, self.mesh, in_specs, out_specs)
+
+        gspecs = sharding.replicated_specs(spikes_lib.init_guard_state())
+
+        def guarded_step_fn(params, opt_state, guard_state, batch, step,
+                            rng, lr):
+            return core(params, opt_state, guard_state, batch, step, rng, lr)
+
+        in_specs = (pspecs, ospecs, gspecs, bspecs, P(), P(), P())
+        out_specs = (pspecs, ospecs, gspecs, P())
+        return _shard_map(guarded_step_fn, self.mesh, in_specs, out_specs)
+
+    def jit_train_step(self, global_batch: int,
+                       opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
+                       *, accum_steps: int = 1,
+                       spike_guard: Optional["spikes_lib.SpikeConfig"] = None,
+                       donate: bool = True):
+        """Jitted engine step with buffer donation: params, opt state (and
+        guard state when present) are donated so the update happens in
+        place — at Ling-Plus scale the params+moments would otherwise
+        double peak HBM every step."""
+        fn = self.make_train_step(global_batch, opt_cfg,
+                                  accum_steps=accum_steps,
+                                  spike_guard=spike_guard)
+        if not donate:
+            return jax.jit(fn)
+        return jax.jit(fn, donate_argnums=(0, 1, 2) if spike_guard
+                       is not None else (0, 1))
 
     # -- eval / grads-only (EDiT workers use this) ------------------------------
     def make_loss_and_grad(self, global_batch: int):

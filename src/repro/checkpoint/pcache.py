@@ -19,6 +19,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import pickle
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
@@ -152,3 +153,32 @@ class PCache:
     def list_checkpoints(self) -> List[str]:
         return sorted(d for d in os.listdir(self.root)
                       if os.path.isdir(os.path.join(self.root, d)))
+
+    def latest(self) -> Optional[str]:
+        """Newest complete checkpoint (has a manifest), ``step_N``-aware:
+        numeric suffixes sort numerically so step_100 beats step_20."""
+        def key(name: str):
+            # step_N names rank above (and among themselves by N) any
+            # manually-named checkpoint, digit-suffixed or not
+            tail = name[5:] if name.startswith("step_") else ""
+            return (1, int(tail), "") if tail.isdigit() else (0, 0, name)
+
+        done = [d for d in self.list_checkpoints()
+                if os.path.exists(os.path.join(self.root, d,
+                                               "manifest.json"))]
+        return max(done, key=key) if done else None
+
+    # -- host-side state (pipeline / detector / step counter) --------------
+    def save_host(self, name: str, obj: Any):
+        """Pickle non-array host state next to the array leaves.  Written
+        synchronously (it is tiny); the array writers may still be running
+        in the background."""
+        path = os.path.join(self.root, name)
+        os.makedirs(path, exist_ok=True)
+        with open(os.path.join(path, "host_state.pkl"), "wb") as f:
+            pickle.dump(obj, f)
+
+    def load_host(self, name: str) -> Any:
+        with open(os.path.join(self.root, name, "host_state.pkl"),
+                  "rb") as f:
+            return pickle.load(f)

@@ -3,14 +3,22 @@
 Mechanisms, exactly as described:
   * spike detection against a running loss statistic (EMA mean/std);
   * narrow vs wide classification (consecutive spiking steps);
-  * **skip** the affected update (the trainer discards the step);
+  * **skip** the affected update (the step discards params/opt commit);
   * **sample retry** — the spiking batch is saved and randomly re-injected
     into later training;
   * **automatic LR reduction** when a spike persists after retry.
 
-The detector is host-side (it consumes scalar losses), which matches the
-paper's monitoring system; the *skip* itself is applied by the trainer by
-not committing (params, opt_state) of the flagged step.
+Two cooperating halves:
+
+  * the **device-side guard** (`init_guard_state` / `guard_commit`) carries
+    the EMA mean/var in a tiny replicated pytree inside the jitted train
+    step and emits a `commit` flag, so the commit-or-discard of §3.4.4 is a
+    `jnp.where` on device — no per-step host round-trip;
+  * the **host-side `SpikeDetector`** keeps the policy: narrow/wide
+    classification, the retry queue, and the LR-halving window.  It is fed
+    asynchronously from drained metrics via `ingest` (the trainer drains
+    every `log_every` steps); the legacy per-step `observe` entry point
+    remains for synchronous callers.
 """
 from __future__ import annotations
 
@@ -18,6 +26,7 @@ import dataclasses
 from collections import deque
 from typing import Any, Deque, Dict, List, Optional, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -32,6 +41,54 @@ class SpikeConfig:
     warmup_steps: int = 20           # no detection before stats settle
 
 
+# ---------------------------------------------------------------------------
+# device-side fast path: EMA state + commit flag inside the jitted step
+# ---------------------------------------------------------------------------
+
+
+def init_guard_state() -> Dict[str, jnp.ndarray]:
+    """Replicated device-side EMA state carried through the train step."""
+    return {"mean": jnp.zeros((), jnp.float32),
+            "var": jnp.full((), 0.25, jnp.float32),
+            "n": jnp.zeros((), jnp.int32),
+            "seeded": jnp.zeros((), jnp.int32)}
+
+
+def guard_commit(cfg: "SpikeConfig", state: Dict[str, jnp.ndarray],
+                 loss: jnp.ndarray):
+    """Pure jnp commit decision (mirrors `SpikeDetector.is_spike`).
+
+    Returns ``(commit, new_state)``: ``commit`` is a bool scalar — False
+    when `loss` spikes above the EMA statistic (or is non-finite), in which
+    case the step's params/opt update must be discarded via `jnp.where`.
+    Spiking losses do NOT update the running stats, exactly like the host
+    detector; the first *committed* observation seeds mean=loss, var=0.25
+    (`seeded` tracks this so e.g. a non-finite step-0 loss cannot poison
+    the EMA or steal the seed).
+    """
+    loss = loss.astype(jnp.float32)
+    first = state["seeded"] == 0
+    mean = jnp.where(first, loss, state["mean"])
+    # n counts observations including this one, like the host detector's
+    # pre-check increment in `observe`
+    warm = (state["n"] + 1) < cfg.warmup_steps
+    std = jnp.maximum(jnp.sqrt(state["var"]), 1e-3)
+    spike = (~warm) & ((loss > mean + cfg.sigma_threshold * std)
+                       | (loss - mean > cfg.abs_threshold))
+    commit = (~spike) & jnp.isfinite(loss)
+    d = cfg.ema_decay
+    delta = loss - mean
+    # non-committed losses fall back to the *stored* stats
+    new_mean = jnp.where(commit, mean + (1 - d) * delta, state["mean"])
+    new_var = jnp.where(commit & ~first,
+                        d * state["var"] + (1 - d) * delta * delta,
+                        state["var"])
+    new_seeded = jnp.where(commit, jnp.ones_like(state["seeded"]),
+                           state["seeded"])
+    return commit, {"mean": new_mean, "var": new_var,
+                    "n": state["n"] + 1, "seeded": new_seeded}
+
+
 @dataclasses.dataclass
 class SpikeEvent:
     step: int
@@ -41,6 +98,11 @@ class SpikeEvent:
 
 
 class SpikeDetector:
+    # `lr_reduced_until` is part of the public contract: the trainer reads
+    # it (via `lr_scale_for`) before the first observe/ingest call, so it
+    # must exist — explicitly initialized — from construction.
+    lr_reduced_until: int
+
     def __init__(self, cfg: SpikeConfig = SpikeConfig()):
         self.cfg = cfg
         self.mean: Optional[float] = None
@@ -50,6 +112,14 @@ class SpikeDetector:
         self.lr_reduced_until = -1
         self.events: List[SpikeEvent] = []
         self.retry_queue: Deque[Any] = deque()
+
+    # -- LR policy ------------------------------------------------------------
+    def lr_scale_for(self, step: int) -> float:
+        """LR multiplier for `step`: `lr_reduce_factor` while inside the
+        reduction window opened by a wide spike, 1.0 otherwise.  Safe to
+        call before any observation (the window starts closed)."""
+        return (self.cfg.lr_reduce_factor
+                if step <= self.lr_reduced_until else 1.0)
 
     # -- statistics -----------------------------------------------------------
     def _update_stats(self, loss: float):
@@ -68,19 +138,15 @@ class SpikeDetector:
         return (loss > self.mean + self.cfg.sigma_threshold * std
                 or loss - self.mean > self.cfg.abs_threshold)
 
-    # -- main entry -------------------------------------------------------------
-    def observe(self, step: int, loss: float, batch: Any = None
-                ) -> Dict[str, Any]:
-        """Returns {'skip': bool, 'lr_scale': float, 'kind': str|None}."""
-        self.n += 1
-        spike = self.is_spike(loss)
-        lr_scale = (self.cfg.lr_reduce_factor
-                    if step <= self.lr_reduced_until else 1.0)
-        if not spike:
+    # -- shared policy block ----------------------------------------------------
+    def _record(self, step: int, loss: float, skipped: bool,
+                batch: Any = None) -> Dict[str, Any]:
+        """Narrow/wide classification, sample-retry queueing, LR-halving
+        window, event log — everything downstream of the skip decision."""
+        if not skipped:
             self.consecutive = 0
             self._update_stats(loss)
-            return {"skip": False, "lr_scale": lr_scale, "kind": None}
-
+            return {"skip": False, "kind": None}
         self.consecutive += 1
         wide = self.consecutive >= self.cfg.wide_after
         action = "skip+retry"
@@ -90,18 +156,51 @@ class SpikeDetector:
             # persistent spike: also reduce LR for a window of steps
             self.lr_reduced_until = step + self.cfg.lr_reduce_steps
             action = "skip+lr"
-            lr_scale = self.cfg.lr_reduce_factor
         self.events.append(SpikeEvent(step, loss, "wide" if wide else
                                       "narrow", action))
         # spiking losses do NOT update the running stats
-        return {"skip": True, "lr_scale": lr_scale,
-                "kind": "wide" if wide else "narrow"}
+        return {"skip": True, "kind": "wide" if wide else "narrow"}
+
+    # -- synchronous entry: detector decides the skip itself ------------------
+    def observe(self, step: int, loss: float, batch: Any = None
+                ) -> Dict[str, Any]:
+        """Returns {'skip': bool, 'lr_scale': float, 'kind': str|None}."""
+        self.n += 1
+        spike = self.is_spike(loss)
+        out = self._record(step, loss, spike, batch)
+        return {**out, "lr_scale": self.lr_scale_for(step)}
+
+    # -- async entry: the skip decision was already made on device -----------
+    def ingest(self, step: int, loss: float, skipped: bool,
+               batch: Any = None) -> Dict[str, Any]:
+        """Record one drained step whose commit/discard already happened on
+        device (`guard_commit`).  Mirrors `observe` minus the skip
+        decision itself."""
+        self.n += 1
+        return self._record(step, loss, skipped, batch)
 
     def pop_retry(self) -> Optional[Any]:
         """Pull a saved batch for random re-injection."""
         if self.retry_queue:
             return self.retry_queue.popleft()
         return None
+
+    # -- checkpoint resume ----------------------------------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        return {"mean": self.mean, "var": self.var, "n": self.n,
+                "consecutive": self.consecutive,
+                "lr_reduced_until": self.lr_reduced_until,
+                "events": list(self.events),
+                "retry_queue": list(self.retry_queue)}
+
+    def load_state_dict(self, s: Dict[str, Any]):
+        self.mean = s["mean"]
+        self.var = s["var"]
+        self.n = s["n"]
+        self.consecutive = s["consecutive"]
+        self.lr_reduced_until = s["lr_reduced_until"]
+        self.events = list(s["events"])
+        self.retry_queue = deque(s["retry_queue"])
 
 
 def inject_synthetic_spikes(losses: np.ndarray, steps: List[int],

@@ -19,10 +19,13 @@ loss — enough signal for the data-ablation benchmark.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
+import threading
 from collections import deque
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Deque, Dict, Iterator, List, Optional, \
+    Sequence, Tuple
 
 import numpy as np
 
@@ -138,13 +141,9 @@ class DataPipeline:
     def push_retry(self, batch: Dict[str, np.ndarray]):
         self.retry_queue.append(batch)
 
-    def next_batch(self, batch_size: Optional[int] = None
-                   ) -> Dict[str, np.ndarray]:
-        """(B, S) packed tokens + next-token labels."""
-        if (self.retry_queue
-                and self.rng.rand() < self.cfg.retry_injection_prob):
-            self.stats["retry_injected"] += 1
-            return self.retry_queue.popleft()
+    def _fresh_batch(self, batch_size: Optional[int] = None
+                     ) -> Dict[str, np.ndarray]:
+        """One freshly-packed (B, S) batch, bypassing the retry lane."""
         B = batch_size or self.cfg.batch_size
         S = self.cfg.seq_len
         need = B * (S + 1)
@@ -154,7 +153,123 @@ class DataPipeline:
         return {"tokens": flat[:, :-1].copy(),
                 "labels": flat[:, 1:].copy()}
 
+    def next_batch(self, batch_size: Optional[int] = None
+                   ) -> Dict[str, np.ndarray]:
+        """(B, S) packed tokens + next-token labels."""
+        if (self.retry_queue
+                and self.rng.rand() < self.cfg.retry_injection_prob):
+            self.stats["retry_injected"] += 1
+            return self.retry_queue.popleft()
+        return self._fresh_batch(batch_size)
+
+    def next_macrobatch(self, accum_steps: int = 1) -> Dict[str, np.ndarray]:
+        """Batch for one engine step.  ``accum_steps == 1`` is exactly
+        `next_batch`; otherwise leaves gain a leading microbatch dim
+        ``(accum, B, S)``.  The retry lane stores whole macrobatches so a
+        skipped step's data is re-injected at the granularity the engine
+        consumes."""
+        if accum_steps <= 1:
+            return self.next_batch()
+        if (self.retry_queue
+                and self.rng.rand() < self.cfg.retry_injection_prob):
+            self.stats["retry_injected"] += 1
+            return self.retry_queue.popleft()
+        mbs = [self._fresh_batch() for _ in range(accum_steps)]
+        return {k: np.stack([m[k] for m in mbs]) for k in mbs[0]}
+
+    # -- checkpoint resume (exact stream continuation) ----------------------
+    def state_dict(self) -> Dict[str, Any]:
+        return {
+            "rng": self.rng.get_state(),
+            "buffer": self.buffer.copy(),
+            "retry_queue": list(self.retry_queue),
+            "stats": dict(self.stats),
+            "dedup_seen": (set(self.dedup.seen) if self.dedup else None),
+            "dedup_dropped": (self.dedup.dropped if self.dedup else 0),
+            "domain_rngs": [d.rng.get_state() for d in self.domains],
+            "probs": self.probs.copy(),
+        }
+
+    def load_state_dict(self, s: Dict[str, Any]):
+        self.rng.set_state(s["rng"])
+        self.buffer = s["buffer"].copy()
+        self.retry_queue = deque(s["retry_queue"])
+        self.stats = dict(s["stats"])
+        if self.dedup is not None and s["dedup_seen"] is not None:
+            self.dedup.seen = set(s["dedup_seen"])
+            self.dedup.dropped = s["dedup_dropped"]
+        for d, st in zip(self.domains, s["domain_rngs"]):
+            d.rng.set_state(st)
+        self.probs = s["probs"].copy()
+
     def batches(self, n: int, bs_schedule=None) -> Iterator[Dict]:
         for i in range(n):
             bs = bs_schedule(i) if bs_schedule else None
             yield self.next_batch(bs)
+
+
+class Prefetcher:
+    """Background-thread batch prefetch: host packing for step i+1..i+depth
+    runs while the device executes step i (jax dispatch is async, so the
+    trainer's `get()` typically returns a ready batch without blocking).
+
+    The producer thread holds `lock` while calling `fn` (which mutates the
+    pipeline's rng/buffer), so `snapshot()` can atomically capture
+    (pipeline state, queued-but-unconsumed batches) for exact checkpoint
+    resume — the queued batches are persisted and re-seeded via `preload`.
+    """
+
+    def __init__(self, fn: Callable[[], Dict[str, np.ndarray]],
+                 depth: int = 2, preload: Optional[List[Dict]] = None):
+        self.fn = fn
+        self.lock = threading.Lock()
+        self._q: Deque = deque(preload or [])
+        self._items = threading.Semaphore(len(self._q))
+        self._space = threading.Semaphore(max(0, depth - len(self._q)))
+        self._stop = False
+        self._error: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            self._space.acquire()
+            if self._stop:
+                return
+            try:
+                with self.lock:
+                    if self._stop:
+                        return
+                    b = self.fn()
+                    self._q.append(b)
+            except BaseException as e:  # noqa: BLE001 — re-raised in get()
+                self._error = e
+                self._items.release()   # wake the consumer to see it
+                return
+            self._items.release()
+
+    def get(self) -> Dict[str, np.ndarray]:
+        self._items.acquire()
+        if self._error is not None:
+            self._items.release()   # keep later get() calls failing fast
+            raise RuntimeError("prefetch producer failed") from self._error
+        with self.lock:
+            b = self._q.popleft()
+        self._space.release()
+        return b
+
+    @contextlib.contextmanager
+    def paused(self):
+        """Context manager quiescing the producer; yields the queued
+        (prefetched but unconsumed) batches.  Call the pipeline's
+        `state_dict()` inside the block so checkpointed pipeline state and
+        pending batches are mutually consistent."""
+        with self.lock:
+            yield list(self._q)
+
+    def stop(self):
+        """Blocks until the producer thread has fully exited — callers
+        (e.g. Trainer.restore) mutate the pipeline right after."""
+        self._stop = True
+        self._space.release()      # unblock the worker
+        self._thread.join()

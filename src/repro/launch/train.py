@@ -5,9 +5,13 @@
 
 Selects the architecture config (``--arch`` over the full registry,
 ``--smoke`` for the reduced same-family variant), builds the mesh over the
-available devices, and runs the full recipe: AdamW + WSD + batch-size
-warmup + spike skip/retry + XPUTimer + optional PCache checkpoints +
-optional EDiT multi-worker mode (``--edit-workers K``).
+available devices, and runs the mesh-native training engine: sharded
+donated train step + microbatch accumulation (``--accum``) + device-side
+spike guard + WSD schedule + prefetch + XPUTimer + optional async PCache
+checkpoints (``--resume`` continues from the newest one) + optional EDiT
+multi-worker mode (``--edit-workers K``).  ``--moe-dispatch ep`` selects
+the expert-parallel all-to-all MoE path for training, matching the serve
+CLI.
 """
 from __future__ import annotations
 
@@ -20,9 +24,11 @@ import jax.numpy as jnp
 
 from repro import api
 from repro.configs.base import get_config, get_smoke_config
+from repro.core import spikes as spikes_lib
 from repro.core.edit import EDiTConfig, EDiTTrainer
 from repro.data.pipeline import DataPipeline, PipelineConfig
 from repro.launch.mesh import make_local_mesh
+from repro.models import model as M
 from repro.optim import adamw
 from repro.optim.schedule import WSDSchedule
 from repro.telemetry.xputimer import XPUTimer
@@ -40,8 +46,20 @@ def main():
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--dp", type=int, default=1)
     ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--accum", type=int, default=1,
+                    help="microbatches accumulated per optimizer step")
+    ap.add_argument("--moe-dispatch", default="auto",
+                    choices=["auto", "fused", "ragged", "batched", "ep"],
+                    help="MoE train dispatch; 'ep' routes tokens over the "
+                         "mesh via the all-to-all expert-parallel path "
+                         "(tp > 1)")
+    ap.add_argument("--no-donate", action="store_true",
+                    help="disable params/opt buffer donation (debugging)")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the newest checkpoint in "
+                         "--checkpoint-dir")
     ap.add_argument("--edit-workers", type=int, default=0,
                     help=">0 runs EDiT local-SGD with K workers")
     ap.add_argument("--report", default=None, help="write history JSON here")
@@ -49,28 +67,37 @@ def main():
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     mesh = make_local_mesh(args.dp, args.tp)
-    runner = api.Runner(cfg, mesh, max_seq=args.seq)
+    flags = M.RunFlags(moe_dispatch=args.moe_dispatch)
+    runner = api.Runner(cfg, mesh, max_seq=args.seq, flags=flags)
     pipe = DataPipeline(PipelineConfig(vocab_size=cfg.vocab_size,
                                        seq_len=args.seq,
                                        batch_size=args.batch))
 
     if args.edit_workers > 0:
-        step = jax.jit(runner.make_train_step(args.batch))
+        # EDiT workers reuse the same engine step builder as the trainer:
+        # donated, spike-guarded, accumulation-aware.  Each worker's opaque
+        # opt slot carries (adamw state, device guard state).
+        spike_cfg = spikes_lib.SpikeConfig()
+        step = runner.jit_train_step(args.batch, accum_steps=args.accum,
+                                     spike_guard=spike_cfg,
+                                     donate=not args.no_donate)
         params = runner.init_params(0)
 
         def worker_step(w, opt, batch, i, lr):
             if opt is None:
-                opt = adamw.init_opt_state(w)
+                opt = (adamw.init_opt_state(w),
+                       spikes_lib.init_guard_state())
+            o, g = opt
             jb = {k: jnp.asarray(v) for k, v in batch.items()}
-            w, opt, m = step(w, opt, jb, jnp.int32(i),
-                             jax.random.PRNGKey(i), jnp.float32(lr))
-            return w, opt, m["loss"]
+            w, o, g, m = step(w, o, g, jb, jnp.int32(i),
+                              jax.random.PRNGKey(i), jnp.float32(lr))
+            return w, (o, g), m["loss"]
 
         edit = EDiTTrainer(params, worker_step,
                            EDiTConfig(sync_every=4), args.edit_workers)
         rounds = max(1, args.steps // 4)
         for r in range(rounds):
-            batches = [[pipe.next_batch() for _ in range(4)]
+            batches = [[pipe.next_macrobatch(args.accum) for _ in range(4)]
                        for _ in range(args.edit_workers)]
             rec = edit.round(batches, lr=args.lr)
             print(f"[edit] round={r} {rec}")
@@ -80,16 +107,27 @@ def main():
             n_steps=args.steps,
             lr_schedule=WSDSchedule(max_lr=args.lr, warmup_steps=20,
                                     total_steps=max(args.steps, 1)),
+            accum_steps=args.accum,
+            donate=not args.no_donate,
             checkpoint_dir=args.checkpoint_dir,
             checkpoint_every=args.checkpoint_every)
         trainer = Trainer(runner, pipe, tcfg, timer=XPUTimer())
+        if args.resume:
+            name = trainer.restore("latest")
+            print(f"[train] resumed from {name} at step {trainer.step}")
         history = trainer.train()
+        trainer.close()
         print(json.dumps(trainer.timer.diagnose()["spans"], indent=1))
 
     if args.report:
         with open(args.report, "w") as f:
             json.dump(history, f, indent=1)
-    print(f"final loss: {history[-1].get('loss', history[-1].get('mean_loss')):.4f}")
+    if history:
+        last = history[-1]
+        print(f"final loss: "
+              f"{last.get('loss', last.get('mean_loss', float('nan'))):.4f}")
+    else:
+        print("final loss: n/a (no steps ran)")
 
 
 if __name__ == "__main__":

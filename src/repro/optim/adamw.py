@@ -99,9 +99,17 @@ def global_grad_norm(grads, specs, env: AxisEnv, mesh_sizes) -> jax.Array:
 
 def apply_updates(params, grads, state, lr: jax.Array,
                   cfg: AdamWConfig = AdamWConfig(), *,
-                  grad_scale: Optional[jax.Array] = None
+                  grad_scale: Optional[jax.Array] = None,
+                  commit: Optional[jax.Array] = None
                   ) -> Tuple[Any, Dict[str, Any]]:
-    """One AdamW step.  `grad_scale` multiplies grads (clip factor)."""
+    """One AdamW step.  `grad_scale` multiplies grads (clip factor).
+
+    `commit` (bool scalar, optional) gates the whole update on device: when
+    False every param/moment leaf and the count keep their old values
+    (§3.4.4 spike skip as a `jnp.where`, no host round-trip).  Because both
+    branches are elementwise selects on buffers the step computes anyway,
+    the discard path costs no extra FLOPs or collectives.
+    """
     count = state["count"] + 1
     b1, b2 = cfg.beta1, cfg.beta2
     c1 = 1.0 - b1 ** count.astype(jnp.float32)
@@ -111,14 +119,19 @@ def apply_updates(params, grads, state, lr: jax.Array,
         g = g.astype(jnp.float32)
         if grad_scale is not None:
             g = g * grad_scale
-        m = b1 * m + (1 - b1) * g
-        v = b2 * v + (1 - b2) * g * g
-        mhat = m / c1
-        vhat = v / c2
+        new_m = b1 * m + (1 - b1) * g
+        new_v = b2 * v + (1 - b2) * g * g
+        mhat = new_m / c1
+        vhat = new_v / c2
         step = mhat / (jnp.sqrt(vhat) + cfg.eps)
         newp = p.astype(jnp.float32) - lr * (step + cfg.weight_decay
                                              * p.astype(jnp.float32))
-        return newp.astype(p.dtype), m, v
+        newp = newp.astype(p.dtype)
+        if commit is not None:
+            newp = jnp.where(commit, newp, p)
+            new_m = jnp.where(commit, new_m, m)
+            new_v = jnp.where(commit, new_v, v)
+        return newp, new_m, new_v
 
     out = jax.tree.map(upd, params, grads, state["m"], state["v"])
     new_params = jax.tree.map(lambda t: t[0], out,
@@ -127,4 +140,6 @@ def apply_updates(params, grads, state, lr: jax.Array,
                          is_leaf=lambda x: isinstance(x, tuple))
     new_v = jax.tree.map(lambda t: t[2], out,
                          is_leaf=lambda x: isinstance(x, tuple))
+    if commit is not None:
+        count = jnp.where(commit, count, state["count"])
     return new_params, {"m": new_m, "v": new_v, "count": count}

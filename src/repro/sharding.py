@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Sequence, Tuple
+from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -234,6 +234,14 @@ def ep_spec(env: AxisEnv, ndim: int, fsdp_dim: Optional[int],
     separate name records the *role*: these shards are addressed by the
     EP all-to-all token exchange, not by a column/row-parallel matmul."""
     return fsdp_spec(env, ndim, fsdp_dim, expert_dim)
+
+
+def replicated_specs(tree) -> Any:
+    """Spec tree replicating every leaf (P()) — used for the small
+    device-side train-state (spike-guard EMA stats) the engine step
+    carries: scalar statistics live on every device so the commit flag is
+    computed without any cross-host traffic."""
+    return jax.tree.map(lambda _: P(), tree)
 
 
 def batch_spec(env: AxisEnv, ndim: int, batch_dim: int = 0) -> P:

@@ -86,6 +86,7 @@ class XPUTimer:
         self.wrapped = False
         self.stats: Dict[str, SpanStats] = defaultdict(SpanStats)
         self.counters: Dict[str, int] = defaultdict(int)
+        self.gauges: Dict[str, float] = {}
         self.errors: List[Dict[str, Any]] = []
         self._lock = threading.Lock()
         self._bg_queue: Deque[Tuple[int, float, float]] = deque()
@@ -124,6 +125,11 @@ class XPUTimer:
 
     def count(self, name: str, n: int = 1):
         self.counters[name] += n
+
+    def gauge(self, name: str, value: float):
+        """Last-value gauge (e.g. commit fraction per metrics drain) —
+        updated from the trainer's asynchronous drain, not per step."""
+        self.gauges[name] = float(value)
 
     # -- memory accounting (Fig. 4 comparison) --------------------------------
     def memory_bytes(self) -> int:
@@ -166,6 +172,7 @@ class XPUTimer:
             report["dominant_span"] = {"name": dominant[0],
                                        "frac": dominant[1]["total_s"] / total}
         report["counters"] = dict(self.counters)
+        report["gauges"] = dict(self.gauges)
         report["log_bytes"] = self.memory_bytes()
         report["full_tracing_bytes"] = self.full_tracing_bytes()
         return report

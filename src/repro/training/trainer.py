@@ -1,27 +1,45 @@
-"""End-to-end trainer wiring the paper's training recipe together:
+"""Mesh-native training engine wiring the paper's training recipe together:
 
-  model (Runner) + AdamW + WSD schedule + batch-size warmup
-  + loss-spike skip & sample-retry (C6) + XPUTimer tracing (C9)
-  + PCache checkpointing (C10).
+  model (Runner) + AdamW + WSD schedule + microbatch grad accumulation
+  + device-side loss-spike guard (C6, §3.4.4) + XPUTimer tracing (C9)
+  + async PCache checkpointing with exact resume (C10).
 
-The spike response is exactly §3.4.4: on a detected spike the update is
-discarded (params/opt not committed), the batch goes to the retry queue for
-random re-injection, and a persistent (wide) spike additionally halves the
-LR for a window of steps.
+Division of labour per §3.4.4 / §2.1 / §2.3.1:
+
+  * the **jitted step** (`Runner.jit_train_step`) owns the fast path:
+    sharded params + AdamW moments (EP-aware PartitionSpecs), fp32 grad
+    accumulation over microbatches as a `lax.scan`, buffer donation so
+    params/opt/guard update in place, and the spike commit-or-discard as a
+    `jnp.where` driven by an EMA loss statistic carried in a tiny
+    replicated device-side state — no per-step host round-trip;
+  * the **host loop** owns the policy: per-step device metrics accumulate
+    in a pending list and are drained (one transfer) every `log_every`
+    steps, feeding the `SpikeDetector`'s narrow/wide classification, the
+    sample-retry queue, and the LR-halving window; `DataPipeline` batches
+    are prefetched on a background thread while the device runs; PCache
+    saves the sharded pytrees with background I/O and `restore` resumes
+    the run — params, opt, guard, pipeline stream, and detector state —
+    exactly.
+
+A consequence of the asynchronous drain: LR-halving after a wide spike
+takes effect within `log_every` steps of the spike (instead of the next
+step), matching the paper's monitoring-system latency rather than the
+idealized synchronous loop.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
-from repro import api
+from repro import api, sharding
+from repro.core import spikes as spikes_lib
 from repro.core.spikes import SpikeConfig, SpikeDetector
-from repro.data.pipeline import DataPipeline, PipelineConfig
+from repro.data.pipeline import DataPipeline, Prefetcher
 from repro.optim import adamw
 from repro.optim.schedule import WSDSchedule
 from repro.telemetry.xputimer import XPUTimer
@@ -36,7 +54,10 @@ class TrainConfig:
     opt: adamw.AdamWConfig = dataclasses.field(
         default_factory=adamw.AdamWConfig)
     spike: SpikeConfig = dataclasses.field(default_factory=SpikeConfig)
-    log_every: int = 10
+    accum_steps: int = 1               # microbatches per optimizer step
+    donate: bool = True                # in-place params/opt/guard update
+    prefetch_depth: int = 2            # batches packed ahead of the device
+    log_every: int = 10                # metrics-drain (host sync) period
     checkpoint_every: int = 0          # 0 = off
     checkpoint_dir: Optional[str] = None
     seed: int = 0
@@ -50,51 +71,191 @@ class Trainer:
         self.cfg = cfg
         self.timer = timer or XPUTimer()
         self.detector = SpikeDetector(cfg.spike)
-        self.step_fn = jax.jit(
-            runner.make_train_step(pipeline.cfg.batch_size, cfg.opt))
+        self.step_fn = runner.jit_train_step(
+            pipeline.cfg.batch_size, cfg.opt, accum_steps=cfg.accum_steps,
+            spike_guard=cfg.spike, donate=cfg.donate)
         self.params = runner.init_params(cfg.seed)
         self.opt_state = adamw.init_opt_state(self.params)
+        self.guard_state = spikes_lib.init_guard_state()
         self.rng = jax.random.PRNGKey(cfg.seed)
+        self.step = 0                  # next step index to execute
         self.history: List[Dict[str, float]] = []
+        self.metric_drains = 0         # host metric transfers (tested)
+        self._pending: List[Any] = []  # (step, lr, device-metrics)
+        self._inflight: Dict[int, Any] = {}   # step -> host batch (retry)
+        self._prefetcher: Optional[Prefetcher] = None
+        self._preload: List[Dict] = []
         self.pcache = None
         if cfg.checkpoint_dir:
             from repro.checkpoint.pcache import PCache
             self.pcache = PCache(cfg.checkpoint_dir)
 
+    # -- data ----------------------------------------------------------------
+    def _ensure_prefetcher(self):
+        if self._prefetcher is None:
+            accum = self.cfg.accum_steps
+            self._prefetcher = Prefetcher(
+                lambda: self.pipeline.next_macrobatch(accum),
+                depth=max(1, self.cfg.prefetch_depth),
+                preload=self._preload)
+            self._preload = []
+
+    # -- main loop -----------------------------------------------------------
     def train(self, n_steps: Optional[int] = None) -> List[Dict[str, float]]:
-        n = n_steps or self.cfg.n_steps
-        for i in range(n):
+        """Run until the *global* step counter reaches `n_steps` (default
+        `cfg.n_steps`).  From a fresh trainer that is n_steps steps; after
+        `restore` it is the remainder of the original schedule — resuming
+        never overshoots the LR schedule's total."""
+        cfg = self.cfg
+        end = n_steps or cfg.n_steps
+        if self.step >= end:
+            return self.history
+        self._ensure_prefetcher()
+        while self.step < end:
+            i = self.step
             with self.timer.span("data"):
-                batch = self.pipeline.next_batch()
+                batch = self._prefetcher.get()
                 jbatch = {k: jnp.asarray(v) for k, v in batch.items()}
-            lr = float(self.cfg.lr_schedule(i))
-            # spike-driven LR reduction applies before the step
-            lr *= self.detector.cfg.lr_reduce_factor \
-                if i <= self.detector.lr_reduced_until else 1.0
+            lr = float(cfg.lr_schedule(i)) * self.detector.lr_scale_for(i)
             with self.timer.span("step"):
-                new_params, new_opt, metrics = self.step_fn(
-                    self.params, self.opt_state, jbatch, jnp.int32(i),
-                    jax.random.fold_in(self.rng, i), jnp.float32(lr))
-                loss = float(metrics["loss"])
-            with self.timer.span("spike_check"):
-                verdict = self.detector.observe(i, loss, batch=batch)
-            if verdict["skip"]:
-                # §3.4.4: skip the update, re-inject the data later
-                self.pipeline.push_retry(batch)
-                self.timer.count("spike_skipped")
+                # async dispatch: no host sync here — the device decides
+                # commit/discard itself, metrics stay on device.
+                (self.params, self.opt_state, self.guard_state,
+                 metrics) = self.step_fn(
+                    self.params, self.opt_state, self.guard_state, jbatch,
+                    jnp.int32(i), jax.random.fold_in(self.rng, i),
+                    jnp.float32(lr))
+            self._pending.append((i, lr, metrics))
+            self._inflight[i] = batch
+            self.step += 1
+            ckpt = bool(self.pcache is not None and cfg.checkpoint_every
+                        and self.step % cfg.checkpoint_every == 0)
+            # log_every=0 means "no periodic logging" (seed semantics), not
+            # "no policy": fall back to per-step drains so spike
+            # retry/LR-halving never starve and _inflight stays bounded
+            if (self.step % (cfg.log_every or 1) == 0
+                    or ckpt or self.step >= end):
+                self._drain()
+            if ckpt:
+                with self.timer.span("checkpoint"):
+                    self.save(f"step_{self.step}")
+        return self.history
+
+    # -- async metrics drain ---------------------------------------------------
+    def _drain(self):
+        """One host transfer for every pending step's metrics; feeds the
+        host-side spike policy (classification / retry / LR window)."""
+        if not self._pending:
+            return
+        with self.timer.span("drain"):
+            host = jax.device_get([m for _, _, m in self._pending])
+        self.metric_drains += 1
+        self.timer.count("metric_drain")
+        n_commit = 0
+        for (i, lr, _), mh in zip(self._pending, host):
+            loss = float(mh["loss"])
+            committed = bool(mh.get("commit", 1.0) >= 0.5)
+            batch = self._inflight.pop(i, None)
+            # the batch payload lives only in the pipeline's retry lane —
+            # the detector records the event, not the data (a second copy
+            # would grow without bound and bloat every host checkpoint)
+            self.detector.ingest(i, loss, skipped=not committed)
+            if committed:
+                n_commit += 1
             else:
-                self.params, self.opt_state = new_params, new_opt
+                # §3.4.4: the update was already discarded on device;
+                # host side re-injects the data later
+                if batch is not None:
+                    self.pipeline.push_retry(batch)
+                self.timer.count("spike_skipped")
             rec = {"step": i, "loss": loss, "lr": lr,
-                   "skipped": bool(verdict["skip"]),
-                   **{k: float(v) for k, v in metrics.items()
-                      if k != "loss"}}
+                   "skipped": not committed,
+                   **{k: float(v) for k, v in mh.items()
+                      if k not in ("loss", "commit")}}
             self.history.append(rec)
             if self.cfg.log_every and i % self.cfg.log_every == 0:
                 print(f"[train] step={i} loss={loss:.4f} lr={lr:.2e}"
-                      f"{' SKIP' if verdict['skip'] else ''}", flush=True)
-            if (self.pcache and self.cfg.checkpoint_every
-                    and i and i % self.cfg.checkpoint_every == 0):
-                with self.timer.span("checkpoint"):
-                    self.pcache.save(f"step_{i}", {
-                        "params": self.params, "opt": self.opt_state})
-        return self.history
+                      f"{'' if committed else ' SKIP'}", flush=True)
+        self.timer.gauge("commit_frac", n_commit / len(host))
+        self._pending.clear()
+        self._inflight.clear()
+
+    # -- checkpointing ---------------------------------------------------------
+    def save(self, name: str) -> str:
+        """Async checkpoint: sharded device pytrees are fetched now (cheap
+        sync; also a donation barrier) and written by PCache's dispersed
+        background writers, plus a host sidecar (pipeline stream incl.
+        prefetched batches, detector policy, step counter) so `restore`
+        continues the run exactly."""
+        assert self.pcache is not None, "TrainConfig.checkpoint_dir unset"
+        self.pcache.wait()             # one background save in flight max
+        if self._prefetcher is not None:
+            with self._prefetcher.paused() as pending:
+                pipe_state = self.pipeline.state_dict()
+                prefetched = pending
+        else:
+            # restore() may have staged preloaded batches without a live
+            # prefetcher yet; dropping them would skip stream positions
+            pipe_state = self.pipeline.state_dict()
+            prefetched = list(self._preload)
+        self.pcache.save(name, {"params": self.params,
+                                "opt": self.opt_state,
+                                "guard": self.guard_state}, block=False)
+        self.pcache.save_host(name, {
+            "step": self.step,
+            "pipeline": pipe_state,
+            "prefetched": prefetched,
+            "detector": self.detector.state_dict(),
+        })
+        return name
+
+    def _reshard(self, tree, specs):
+        mesh = self.runner.mesh
+        spec_leaves = jax.tree.leaves(specs,
+                                      is_leaf=lambda x: isinstance(x, P))
+        leaves, treedef = jax.tree.flatten(tree)
+        out = [jax.device_put(l, jax.sharding.NamedSharding(mesh, s))
+               for l, s in zip(leaves, spec_leaves)]
+        return jax.tree.unflatten(treedef, out)
+
+    def restore(self, name: str = "latest") -> str:
+        """Resume from a PCache checkpoint: device pytrees are re-sharded
+        onto the runner's spec trees, the data stream continues from its
+        saved position (including batches that were sitting in the
+        prefetch queue), and the spike policy window carries over."""
+        assert self.pcache is not None, "TrainConfig.checkpoint_dir unset"
+        self.pcache.wait()
+        if name == "latest":
+            found = self.pcache.latest()
+            assert found is not None, "no complete checkpoint found"
+            name = found
+        # quiesce the producer BEFORE touching pipeline state: the thread
+        # mutates pipeline rng/buffer under its own lock only
+        if self._prefetcher is not None:
+            self._prefetcher.stop()
+            self._prefetcher = None
+        like = {"params": self.params, "opt": self.opt_state,
+                "guard": self.guard_state}
+        tree = self.pcache.load(name, like)
+        pspecs = self.runner.specs
+        self.params = self._reshard(tree["params"], pspecs)
+        self.opt_state = self._reshard(tree["opt"],
+                                       adamw.opt_state_specs(pspecs))
+        self.guard_state = self._reshard(
+            tree["guard"], sharding.replicated_specs(tree["guard"]))
+        host = self.pcache.load_host(name)
+        self.step = host["step"]
+        self.pipeline.load_state_dict(host["pipeline"])
+        self.detector.load_state_dict(host["detector"])
+        self._preload = list(host["prefetched"])
+        self._pending.clear()
+        self._inflight.clear()
+        return name
+
+    def close(self):
+        """Stop the prefetch thread and flush async checkpoint writers."""
+        if self._prefetcher is not None:
+            self._prefetcher.stop()
+            self._prefetcher = None
+        if self.pcache is not None:
+            self.pcache.wait()
