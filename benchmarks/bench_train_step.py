@@ -9,6 +9,10 @@ Variants (ling-lite smoke, tp=1, interpret kernels):
   accum          2-microbatch lax.scan accumulation, no donation
   donate+accum   the engine default
 
+Plus a batch-size-warmup sweep (§3.4.1): the staged engine walks accum
+1 -> 2 -> 4 at a fixed microbatch, recording per-stage step time and the
+total compile count (must equal the number of distinct stages).
+
 Writes the committed trajectory artifact ``BENCH_train_step.json`` at the
 repo root (plus the harness's experiments/bench/train_step.json detail).
 """
@@ -92,11 +96,53 @@ def run(fast=False):
                      f"B{B}xS{S}_accum{A if accum else 1}"
                      f"{'_donated' if donate else ''}"))
 
+    # -- batch-size warmup sweep: staged accum at fixed microbatch --------
+    from repro.optim.schedule import AccumWarmup
+    warm = AccumWarmup(microbatch=Bm, start=Bm, end=4 * Bm,
+                       warmup_steps=3 * max(1, n), increments=2)
+    staged = runner.jit_train_step(Bm, accum_steps=warm.stages(),
+                                   spike_guard=spikes.SpikeConfig(),
+                                   donate=True)
+    p = runner.init_params(0)
+    state = (p, adamw.init_opt_state(p), spikes.init_guard_state())
+    warm_out = {}
+    for accum in staged.stages:
+        mb = {"tokens": jnp.asarray(
+                  rs.randint(0, cfg.vocab_size,
+                             ((accum, Bm, S) if accum > 1 else (Bm, S))
+                             ).astype(np.int32)),
+              "labels": jnp.asarray(
+                  rs.randint(0, cfg.vocab_size,
+                             ((accum, Bm, S) if accum > 1 else (Bm, S))
+                             ).astype(np.int32))}
+        fn = staged.for_accum(accum)
+        # ≥ 2 warm calls: compile AND the interpret-kernels' expensive
+        # first execution both stay out of the timed window
+        for t in range(max(2, warmup)):
+            state = fn(*state, mb, jnp.int32(t), jax.random.PRNGKey(t),
+                       jnp.float32(1e-3))[:3]
+        jax.block_until_ready(state)
+        t0 = time.perf_counter()
+        for t in range(n):
+            state = fn(*state, mb, jnp.int32(t), jax.random.PRNGKey(t),
+                       jnp.float32(1e-3))[:3]
+        jax.block_until_ready(state)
+        us = (time.perf_counter() - t0) / n * 1e6
+        warm_out[str(accum)] = us
+        rows.append((f"train_step_warmup_accum{accum}", f"{us:.0f}",
+                     f"B{Bm}xS{S}_staged_donated"))
+    assert staged.n_compiles == len(staged.stages), staged.trace_counts
+    rows.append(("train_step_warmup_compiles", str(staged.n_compiles),
+                 f"stages={list(staged.stages)}"))
+
     detail = {
         "bench": "mesh-native train step: donation x accumulation x "
-                 "host-sync",
+                 "host-sync + staged bs-warmup sweep",
         "arch": "ling-lite-smoke", "batch": B, "seq": S,
         "accum_steps": A, "steps_timed": n, **out,
+        "warmup_sweep_us_per_step": warm_out,
+        "warmup_stages": list(staged.stages),
+        "warmup_compiles": staged.n_compiles,
     }
     with open(os.path.join(ROOT, "BENCH_train_step.json"), "w") as f:
         json.dump({**detail, "date": time.strftime("%Y-%m-%d"),

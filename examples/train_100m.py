@@ -16,7 +16,7 @@ from repro import api
 from repro.configs.base import MoEConfig, ModelConfig
 from repro.data.pipeline import DataPipeline, PipelineConfig
 from repro.launch.mesh import make_local_mesh
-from repro.optim.schedule import WSDSchedule
+from repro.optim.schedule import AccumWarmup, WSDSchedule
 from repro.telemetry.xputimer import XPUTimer
 from repro.training.trainer import TrainConfig, Trainer
 
@@ -25,6 +25,10 @@ ap.add_argument("--steps", type=int, default=300)
 ap.add_argument("--tiny", action="store_true")
 ap.add_argument("--accum", type=int, default=1,
                 help="microbatches accumulated per optimizer step")
+ap.add_argument("--bs-warmup", default=None, metavar="START:END:STEPS",
+                help="grow the global batch START->END sequences over "
+                     "STEPS steps by scheduling the accum count (§3.4.1); "
+                     "START/END must be multiples of the microbatch")
 ap.add_argument("--resume", action="store_true",
                 help="resume from the newest checkpoint")
 ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
@@ -48,12 +52,16 @@ print(f"params: {cfg.param_count()/1e6:.0f}M total / "
 runner = api.Runner(cfg, make_local_mesh(1, 1), max_seq=seq)
 pipe = DataPipeline(PipelineConfig(vocab_size=vocab, seq_len=seq,
                                    batch_size=batch))
+bs_warmup = None
+if args.bs_warmup:
+    s, e, n = (int(x) for x in args.bs_warmup.split(":"))
+    bs_warmup = AccumWarmup(microbatch=batch, start=s, end=e, warmup_steps=n)
 trainer = Trainer(
     runner, pipe,
     TrainConfig(n_steps=args.steps,
                 lr_schedule=WSDSchedule(max_lr=6e-4, warmup_steps=30,
                                         total_steps=args.steps),
-                accum_steps=args.accum,
+                accum_steps=args.accum, bs_warmup=bs_warmup,
                 checkpoint_dir=args.checkpoint_dir, checkpoint_every=100,
                 log_every=10),
     timer=XPUTimer())

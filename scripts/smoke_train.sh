@@ -17,4 +17,8 @@ XLA_FLAGS="--xla_force_host_platform_device_count=2 ${XLA_FLAGS:-}" \
 python -m repro.launch.train --arch ling-lite --smoke \
     --steps 5 --batch 4 --seq 64 --dp 2
 
+echo "== smoke: batch-size warmup 4->8 over 4 steps (staged accum) =="
+python -m repro.launch.train --arch ling-lite --smoke \
+    --steps 6 --batch 4 --seq 64 --bs-warmup 4:8:4
+
 echo "smoke_train OK"

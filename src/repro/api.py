@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -199,13 +199,27 @@ class Runner:
 
     def jit_train_step(self, global_batch: int,
                        opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
-                       *, accum_steps: int = 1,
+                       *, accum_steps: Union[int, Sequence[int]] = 1,
                        spike_guard: Optional["spikes_lib.SpikeConfig"] = None,
                        donate: bool = True):
         """Jitted engine step with buffer donation: params, opt state (and
         guard state when present) are donated so the update happens in
         place — at Ling-Plus scale the params+moments would otherwise
-        double peak HBM every step."""
+        double peak HBM every step.
+
+        ``accum_steps`` may also be a *sequence* of accum stages (the
+        §3.4.1 batch-size warmup path, `optim.schedule.AccumWarmup
+        .stages()`): ``global_batch`` is then the fixed per-microbatch
+        batch and the return value is a `StagedTrainStep` caching one
+        compiled step per stage — the whole warmup costs at most
+        ``len(stages)`` compilations, never a per-step recompile.  Grad
+        normalization is correct at every stage because each stage's
+        scan divides by its own accum count.
+        """
+        if not isinstance(accum_steps, int):
+            return StagedTrainStep(self, global_batch, opt_cfg,
+                                   tuple(accum_steps),
+                                   spike_guard=spike_guard, donate=donate)
         fn = self.make_train_step(global_batch, opt_cfg,
                                   accum_steps=accum_steps,
                                   spike_guard=spike_guard)
@@ -328,6 +342,69 @@ class Runner:
                                   cross_len=self.cfg.encoder_seq_len))
         specs = cache_partition_specs(self.cfg, env, local, b)
         return globalize_shapes(local, specs, self.mesh_sizes), b
+
+
+class StagedTrainStep:
+    """Per-accum-stage compile cache for the batch-size warmup (§3.4.1).
+
+    Each stage shares the fixed `(B_micro, S)` microbatch shape and
+    differs only in the length of the accumulation scan, so one jitted
+    function per *distinct* stage suffices for the whole warmup.  Steps
+    are built lazily by `for_accum` and reused across stage revisits
+    (e.g. after a mid-warmup checkpoint restore).  `trace_counts` records
+    how many times each stage's python step was traced — equal to its
+    XLA compile count, asserted ≤ 1 per stage by the engine tests.
+    """
+
+    def __init__(self, runner: "Runner", micro_batch: int,
+                 opt_cfg: adamw.AdamWConfig, stages: Tuple[int, ...],
+                 *, spike_guard=None, donate: bool = True):
+        stages = tuple(sorted({int(s) for s in stages}))
+        if not stages or stages[0] < 1:
+            raise ValueError(f"accum stages must be >= 1, got {stages}")
+        self.runner = runner
+        self.micro_batch = micro_batch
+        self.opt_cfg = opt_cfg
+        self.stages = stages
+        self.spike_guard = spike_guard
+        self.donate = donate
+        self.trace_counts: Dict[int, int] = {}
+        self._fns: Dict[int, Any] = {}
+
+    def for_accum(self, accum: int):
+        """The compiled step for one accum stage (batch leaves are
+        ``(B, S)`` at accum 1, ``(accum, B, S)`` otherwise)."""
+        accum = int(accum)
+        if accum not in self.stages:
+            raise ValueError(f"accum {accum} not in declared stages "
+                             f"{self.stages}")
+        fn = self._fns.get(accum)
+        if fn is None:
+            fn = self._fns[accum] = self._build(accum)
+        return fn
+
+    def _build(self, accum: int):
+        raw = self.runner.make_train_step(
+            self.micro_batch, self.opt_cfg, accum_steps=accum,
+            spike_guard=self.spike_guard)
+        counts = self.trace_counts
+
+        def step_fn(*args):
+            counts[accum] = counts.get(accum, 0) + 1   # runs at trace time
+            return raw(*args)
+
+        step_fn.__name__ = f"train_step_accum{accum}"
+        if not self.donate:
+            return jax.jit(step_fn)
+        return jax.jit(step_fn, donate_argnums=(0, 1, 2)
+                       if self.spike_guard is not None else (0, 1))
+
+    @property
+    def n_compiles(self) -> int:
+        return sum(self.trace_counts.values())
+
+    def __call__(self, accum: int, *args):
+        return self.for_accum(accum)(*args)
 
 
 def globalize_shapes(shape_tree, spec_tree, mesh_sizes):

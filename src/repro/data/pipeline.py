@@ -9,9 +9,11 @@ The paper's 9T-token corpus is data-gated; what we reproduce is the
   * **sample-level online deduplication** during mixing (§3.4.1), via
     content hashing;
   * sequence packing to fixed seq_len with document separators;
-  * batch-size warmup (§3.4.1) — the iterator yields growing batches;
+  * batch-size warmup (§3.4.1) — `next_macrobatch(accum)` serves the
+    engine's scheduled-accumulation warmup at a fixed microbatch shape;
   * a retry lane for spike-affected batches (§3.4.4): saved samples are
-    randomly re-injected into subsequent batches.
+    randomly re-injected into subsequent batches, regranulated when the
+    warmup stage changed in between.
 
 Each synthetic domain is a distinct Zipfian token distribution with
 domain-specific n-gram structure, so mixture weights measurably change the
@@ -105,6 +107,13 @@ def default_domains(seed: int = 0) -> List[DomainSpec]:
 
 
 class DataPipeline:
+    """All public methods are safe to call concurrently from the trainer's
+    main thread and the `Prefetcher` worker: every mutation of the shared
+    stream state (rng, packing buffer, dedup set, retry lane, stats) runs
+    under one internal re-entrant lock.  Previously the worker held only
+    the *prefetcher's* lock, so a main-thread `push_retry` (spike drain)
+    or `state_dict` (non-prefetching checkpoint) raced the producer."""
+
     def __init__(self, cfg: PipelineConfig):
         self.cfg = cfg
         domains = list(cfg.domains) or default_domains(cfg.seed)
@@ -114,14 +123,19 @@ class DataPipeline:
         self.rng = np.random.RandomState(cfg.seed)
         self.dedup = DedupFilter() if cfg.dedup else None
         self.buffer = np.zeros((0,), np.int32)
-        self.retry_queue: deque = deque()
+        # retry lane entries are (accum, batch): the accumulation count
+        # the batch was packed for, so re-injection can replay at a
+        # compatible granularity after a batch-size-warmup stage change
+        self.retry_queue: Deque[Tuple[int, Dict[str, np.ndarray]]] = deque()
         self.stats = {"docs": 0, "dedup_dropped": 0, "retry_injected": 0}
+        self._lock = threading.RLock()
 
     def set_mixture(self, weights: Dict[str, float]):
         """Adjust the data mixture live (§3.4.1 'adjustments to the mix')."""
-        w = np.array([weights.get(d.spec.name, d.spec.weight)
-                      * d.spec.quality for d in self.domains])
-        self.probs = w / w.sum()
+        with self._lock:
+            w = np.array([weights.get(d.spec.name, d.spec.weight)
+                          * d.spec.quality for d in self.domains])
+            self.probs = w / w.sum()
 
     def _fill(self, n_tokens: int):
         parts = [self.buffer]
@@ -138,8 +152,23 @@ class DataPipeline:
             have += len(doc) + 1
         self.buffer = np.concatenate(parts)
 
-    def push_retry(self, batch: Dict[str, np.ndarray]):
-        self.retry_queue.append(batch)
+    def push_retry(self, batch: Dict[str, np.ndarray],
+                   accum_steps: Optional[int] = None):
+        """Queue a spike-skipped batch for later re-injection (§3.4.4).
+        `accum_steps` is the granularity the batch was packed for;
+        omitted, it is inferred from the leading macrobatch dim."""
+        if accum_steps is None:
+            t = batch["tokens"]
+            accum_steps = int(t.shape[0]) if t.ndim == 3 else 1
+        with self._lock:
+            self.retry_queue.append((int(accum_steps), batch))
+
+    def _pop_retry(self) -> Optional[Tuple[int, Dict[str, np.ndarray]]]:
+        if (self.retry_queue
+                and self.rng.rand() < self.cfg.retry_injection_prob):
+            self.stats["retry_injected"] += 1
+            return self.retry_queue.popleft()
+        return None
 
     def _fresh_batch(self, batch_size: Optional[int] = None
                      ) -> Dict[str, np.ndarray]:
@@ -153,54 +182,96 @@ class DataPipeline:
         return {"tokens": flat[:, :-1].copy(),
                 "labels": flat[:, 1:].copy()}
 
+    @staticmethod
+    def _split_micro(accum: int, batch: Dict[str, np.ndarray]
+                     ) -> List[Dict[str, np.ndarray]]:
+        if accum <= 1:
+            return [batch]
+        return [{k: v[i] for k, v in batch.items()} for i in range(accum)]
+
+    @staticmethod
+    def _stack_micro(mbs: List[Dict[str, np.ndarray]]
+                     ) -> Dict[str, np.ndarray]:
+        return {k: np.stack([m[k] for m in mbs]) for k in mbs[0]}
+
     def next_batch(self, batch_size: Optional[int] = None
                    ) -> Dict[str, np.ndarray]:
         """(B, S) packed tokens + next-token labels."""
-        if (self.retry_queue
-                and self.rng.rand() < self.cfg.retry_injection_prob):
-            self.stats["retry_injected"] += 1
-            return self.retry_queue.popleft()
-        return self._fresh_batch(batch_size)
+        with self._lock:
+            entry = self._pop_retry()
+            if entry is not None:
+                accum, batch = entry
+                if accum <= 1:
+                    return batch
+                # macrobatch retry replayed at batch granularity: hand out
+                # the first microbatch, requeue the remainder
+                micros = self._split_micro(accum, batch)
+                self._requeue(micros[1:])
+                return micros[0]
+            return self._fresh_batch(batch_size)
+
+    def _requeue(self, micros: List[Dict[str, np.ndarray]]):
+        if not micros:
+            return
+        if len(micros) == 1:
+            self.retry_queue.appendleft((1, micros[0]))
+        else:
+            self.retry_queue.appendleft((len(micros),
+                                         self._stack_micro(micros)))
 
     def next_macrobatch(self, accum_steps: int = 1) -> Dict[str, np.ndarray]:
         """Batch for one engine step.  ``accum_steps == 1`` is exactly
         `next_batch`; otherwise leaves gain a leading microbatch dim
-        ``(accum, B, S)``.  The retry lane stores whole macrobatches so a
-        skipped step's data is re-injected at the granularity the engine
-        consumes."""
-        if accum_steps <= 1:
+        ``(accum, B, S)``.  Retry-lane entries remember the accum count
+        they were packed for: an exact match replays whole; a mismatch
+        (batch-size-warmup stage change between skip and re-injection) is
+        regranulated — split into microbatches, topped up with fresh
+        data, the overflow requeued — so no stream positions are lost."""
+        A = max(1, int(accum_steps))
+        if A == 1:
             return self.next_batch()
-        if (self.retry_queue
-                and self.rng.rand() < self.cfg.retry_injection_prob):
-            self.stats["retry_injected"] += 1
-            return self.retry_queue.popleft()
-        mbs = [self._fresh_batch() for _ in range(accum_steps)]
-        return {k: np.stack([m[k] for m in mbs]) for k in mbs[0]}
+        with self._lock:
+            entry = self._pop_retry()
+            if entry is None:
+                return self._stack_micro(
+                    [self._fresh_batch() for _ in range(A)])
+            accum, batch = entry
+            if accum == A:
+                return batch
+            micros = self._split_micro(accum, batch)
+            if len(micros) > A:
+                self._requeue(micros[A:])
+                micros = micros[:A]
+            while len(micros) < A:
+                micros.append(self._fresh_batch())
+            return self._stack_micro(micros)
 
     # -- checkpoint resume (exact stream continuation) ----------------------
     def state_dict(self) -> Dict[str, Any]:
-        return {
-            "rng": self.rng.get_state(),
-            "buffer": self.buffer.copy(),
-            "retry_queue": list(self.retry_queue),
-            "stats": dict(self.stats),
-            "dedup_seen": (set(self.dedup.seen) if self.dedup else None),
-            "dedup_dropped": (self.dedup.dropped if self.dedup else 0),
-            "domain_rngs": [d.rng.get_state() for d in self.domains],
-            "probs": self.probs.copy(),
-        }
+        with self._lock:
+            return {
+                "rng": self.rng.get_state(),
+                "buffer": self.buffer.copy(),
+                "retry_queue": list(self.retry_queue),
+                "stats": dict(self.stats),
+                "dedup_seen": (set(self.dedup.seen) if self.dedup else None),
+                "dedup_dropped": (self.dedup.dropped if self.dedup else 0),
+                "domain_rngs": [d.rng.get_state() for d in self.domains],
+                "probs": self.probs.copy(),
+            }
 
     def load_state_dict(self, s: Dict[str, Any]):
-        self.rng.set_state(s["rng"])
-        self.buffer = s["buffer"].copy()
-        self.retry_queue = deque(s["retry_queue"])
-        self.stats = dict(s["stats"])
-        if self.dedup is not None and s["dedup_seen"] is not None:
-            self.dedup.seen = set(s["dedup_seen"])
-            self.dedup.dropped = s["dedup_dropped"]
-        for d, st in zip(self.domains, s["domain_rngs"]):
-            d.rng.set_state(st)
-        self.probs = s["probs"].copy()
+        with self._lock:
+            self.rng.set_state(s["rng"])
+            self.buffer = s["buffer"].copy()
+            self.retry_queue = deque(s["retry_queue"])
+            self.stats = dict(s["stats"])
+            if self.dedup is not None and s["dedup_seen"] is not None:
+                self.dedup.seen = set(s["dedup_seen"])
+                self.dedup.dropped = s["dedup_dropped"]
+            for d, st in zip(self.domains, s["domain_rngs"]):
+                d.rng.set_state(st)
+            self.probs = s["probs"].copy()
 
     def batches(self, n: int, bs_schedule=None) -> Iterator[Dict]:
         for i in range(n):

@@ -6,7 +6,9 @@
 Selects the architecture config (``--arch`` over the full registry,
 ``--smoke`` for the reduced same-family variant), builds the mesh over the
 available devices, and runs the mesh-native training engine: sharded
-donated train step + microbatch accumulation (``--accum``) + device-side
+donated train step + microbatch accumulation (``--accum``) + batch-size
+warmup via scheduled accumulation (``--bs-warmup start:end:steps``,
+§3.4.1 — one compile per stage, never per-step) + device-side
 spike guard + WSD schedule + prefetch + XPUTimer + optional async PCache
 checkpoints (``--resume`` continues from the newest one) + optional EDiT
 multi-worker mode (``--edit-workers K``).  ``--moe-dispatch ep`` selects
@@ -30,7 +32,7 @@ from repro.data.pipeline import DataPipeline, PipelineConfig
 from repro.launch.mesh import make_local_mesh
 from repro.models import model as M
 from repro.optim import adamw
-from repro.optim.schedule import WSDSchedule
+from repro.optim.schedule import AccumWarmup, WSDSchedule
 from repro.telemetry.xputimer import XPUTimer
 from repro.training.trainer import TrainConfig, Trainer
 
@@ -48,6 +50,12 @@ def main():
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--accum", type=int, default=1,
                     help="microbatches accumulated per optimizer step")
+    ap.add_argument("--bs-warmup", default=None, metavar="START:END:STEPS",
+                    help="batch-size warmup (§3.4.1) through the "
+                         "accumulation dim: global batch grows START->END "
+                         "sequences over STEPS steps while the microbatch "
+                         "stays --batch (START/END must be multiples of "
+                         "--batch); overrides --accum, trainer path only")
     ap.add_argument("--moe-dispatch", default="auto",
                     choices=["auto", "fused", "ragged", "batched", "ep"],
                     help="MoE train dispatch; 'ep' routes tokens over the "
@@ -64,6 +72,17 @@ def main():
                     help=">0 runs EDiT local-SGD with K workers")
     ap.add_argument("--report", default=None, help="write history JSON here")
     args = ap.parse_args()
+
+    bs_warmup = None
+    if args.bs_warmup:
+        if args.edit_workers > 0:
+            ap.error("--bs-warmup is not supported with --edit-workers")
+        try:
+            start, end, steps = (int(x) for x in args.bs_warmup.split(":"))
+            bs_warmup = AccumWarmup(microbatch=args.batch, start=start,
+                                    end=end, warmup_steps=steps)
+        except ValueError as e:
+            ap.error(f"--bs-warmup: {e}")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     mesh = make_local_mesh(args.dp, args.tp)
@@ -108,6 +127,7 @@ def main():
             lr_schedule=WSDSchedule(max_lr=args.lr, warmup_steps=20,
                                     total_steps=max(args.steps, 1)),
             accum_steps=args.accum,
+            bs_warmup=bs_warmup,
             donate=not args.no_donate,
             checkpoint_dir=args.checkpoint_dir,
             checkpoint_every=args.checkpoint_every)

@@ -2,15 +2,24 @@
 
 * WSD (warmup–stable–decay): linear warmup over the first `warmup_steps`
   (paper: 2K) to `max_lr` (paper: 2.4e-4); held stable; halved once ~60% of
-  the training tokens are consumed (§3.4.1).
+  the training tokens are consumed (§3.4.1).  The halving point is clamped
+  to the end of the warmup ramp so small `total_steps` (test configs)
+  never produce a non-monotone warmup.
 * Annealing: inverse-square-root decay from 1.2e-4 to 1.2e-8 (§3.4.3).
 * Batch-size warmup: 2,560 -> 8,960 sequences, grown stepwise (§3.4.1).
+  `BatchSizeWarmup` is the raw size schedule; `AccumWarmup` is the
+  engine-facing form — the per-microbatch shape stays fixed and the
+  global batch grows by scheduling the number of accumulated microbatches
+  per optimizer step, so the warmup costs at most one XLA compilation per
+  stage instead of one per batch shape (see `api.Runner.jit_train_step`).
 * Spike response: the trainer multiplies the LR by `spike_lr_factor` for
   steps where a persistent loss spike was detected (§3.4.4).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -25,9 +34,21 @@ class WSDSchedule:
     def __call__(self, step):
         step = jnp.asarray(step, jnp.float32)
         warm = self.max_lr * jnp.minimum(step / max(self.warmup_steps, 1), 1.0)
-        halved = jnp.where(step >= self.halve_frac * self.total_steps,
-                           0.5, 1.0)
+        # never halve inside the warmup ramp: with tiny total_steps the
+        # 60%-token point can land mid-warmup, which would make the ramp
+        # non-monotone (warm * 0.5 dips below already-visited LRs)
+        halve_at = max(self.halve_frac * self.total_steps, self.warmup_steps)
+        halved = jnp.where(step >= halve_at, 0.5, 1.0)
         return warm * halved
+
+    def host(self, step: int) -> float:
+        """Pure-host evaluation: the trainer loop calls the schedule every
+        step before dispatching, and a jnp evaluation there would enqueue
+        a device computation whose `float()` blocks behind the in-flight
+        train step — a hidden per-step sync defeating async dispatch."""
+        warm = self.max_lr * min(step / max(self.warmup_steps, 1), 1.0)
+        halve_at = max(self.halve_frac * self.total_steps, self.warmup_steps)
+        return warm * (0.5 if step >= halve_at else 1.0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,17 +68,96 @@ class InvSqrtAnnealing:
 
 @dataclasses.dataclass(frozen=True)
 class BatchSizeWarmup:
-    """§3.4.1: batch size grows 2,560 -> 8,960 sequences stepwise."""
+    """§3.4.1: batch size grows 2,560 -> 8,960 sequences stepwise.
+
+    Sizes are rounded down to `round_multiple` for sharding friendliness
+    (never below `start`).  When `round_multiple` is None it is derived
+    from the endpoints: the largest power of two dividing both `start`
+    and `end`, capped at 256 (the paper-scale divisor).  A fixed 256
+    would pin any `start < 256` config at `start` for the whole warmup.
+    """
+    start: int = 2_560
+    end: int = 8_960
+    warmup_steps: int = 5_000
+    increments: int = 8
+    round_multiple: Optional[int] = None
+
+    @property
+    def multiple(self) -> int:
+        if self.round_multiple:
+            return self.round_multiple
+        g = max(1, math.gcd(self.start, self.end))
+        return min(256, g & -g)      # largest power of two dividing both
+
+    def stage_for(self, step: int) -> int:
+        if step >= self.warmup_steps:
+            return self.increments
+        return int(step / max(self.warmup_steps, 1) * self.increments)
+
+    def size_for_stage(self, stage: int) -> int:
+        if stage >= self.increments:
+            return self.end
+        size = self.start + (self.end - self.start) * stage // self.increments
+        m = self.multiple
+        return max(self.start, (size // m) * m)
+
+    def sizes(self) -> Tuple[int, ...]:
+        """Distinct batch sizes the schedule visits, ascending."""
+        return tuple(sorted({self.size_for_stage(k)
+                             for k in range(self.increments + 1)}))
+
+    def __call__(self, step: int) -> int:
+        return self.size_for_stage(self.stage_for(step))
+
+
+@dataclasses.dataclass(frozen=True)
+class AccumWarmup:
+    """Engine-facing batch-size warmup (§3.4.1): fixed microbatch shape,
+    scheduled accumulation count.
+
+    The jitted train step compiles for a fixed `(B_micro, S)` microbatch;
+    growing the batch through the accumulation dimension means the warmup
+    needs at most one compilation per distinct accum stage (the
+    GSPMD/T5X-style fixed-shape route) instead of recompiling per batch
+    size.  `start`/`end` are global batch sizes in sequences and must be
+    multiples of `microbatch`; rounding uses `microbatch` as the
+    sharding-friendly divisor so every scheduled size maps to a whole
+    number of microbatches.
+    """
+    microbatch: int
     start: int = 2_560
     end: int = 8_960
     warmup_steps: int = 5_000
     increments: int = 8
 
-    def __call__(self, step: int) -> int:
-        if step >= self.warmup_steps:
-            return self.end
-        frac = step / max(self.warmup_steps, 1)
-        stage = int(frac * self.increments)
-        size = self.start + (self.end - self.start) * stage // self.increments
-        # round to a multiple of the starting batch for sharding friendliness
-        return max(self.start, (size // 256) * 256)
+    def __post_init__(self):
+        if self.microbatch < 1:
+            raise ValueError(f"microbatch must be >= 1, got {self.microbatch}")
+        if self.end < self.start:
+            raise ValueError(f"end {self.end} < start {self.start}")
+        for name in ("start", "end"):
+            v = getattr(self, name)
+            if v % self.microbatch:
+                raise ValueError(
+                    f"AccumWarmup {name}={v} is not a multiple of "
+                    f"microbatch={self.microbatch}")
+
+    @property
+    def batch_schedule(self) -> BatchSizeWarmup:
+        return BatchSizeWarmup(self.start, self.end, self.warmup_steps,
+                               self.increments,
+                               round_multiple=self.microbatch)
+
+    def batch_for(self, step: int) -> int:
+        """Global batch (sequences) consumed by the optimizer step."""
+        return self.batch_schedule(step)
+
+    def accum_for(self, step: int) -> int:
+        """Microbatches accumulated per optimizer step at `step`."""
+        return self.batch_for(step) // self.microbatch
+
+    def stages(self) -> Tuple[int, ...]:
+        """Distinct accum counts the warmup visits, ascending — the
+        engine compiles one step function per entry."""
+        return tuple(s // self.microbatch
+                     for s in self.batch_schedule.sizes())

@@ -1,8 +1,11 @@
 """Mesh-native training engine wiring the paper's training recipe together:
 
   model (Runner) + AdamW + WSD schedule + microbatch grad accumulation
-  + device-side loss-spike guard (C6, §3.4.4) + XPUTimer tracing (C9)
-  + async PCache checkpointing with exact resume (C10).
+  + batch-size warmup via scheduled accumulation (§3.4.1: a staged
+  compile cache swaps step functions at stage boundaries, see
+  docs/training.md) + device-side loss-spike guard (C6, §3.4.4)
+  + XPUTimer tracing (C9) + async PCache checkpointing with exact resume
+  (C10), including mid-warmup stage carry-over.
 
 Division of labour per §3.4.4 / §2.1 / §2.3.1:
 
@@ -29,6 +32,7 @@ idealized synchronous loop.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -41,7 +45,7 @@ from repro.core import spikes as spikes_lib
 from repro.core.spikes import SpikeConfig, SpikeDetector
 from repro.data.pipeline import DataPipeline, Prefetcher
 from repro.optim import adamw
-from repro.optim.schedule import WSDSchedule
+from repro.optim.schedule import AccumWarmup, WSDSchedule
 from repro.telemetry.xputimer import XPUTimer
 
 
@@ -55,6 +59,7 @@ class TrainConfig:
         default_factory=adamw.AdamWConfig)
     spike: SpikeConfig = dataclasses.field(default_factory=SpikeConfig)
     accum_steps: int = 1               # microbatches per optimizer step
+    bs_warmup: Optional[AccumWarmup] = None   # §3.4.1 scheduled accumulation
     donate: bool = True                # in-place params/opt/guard update
     prefetch_depth: int = 2            # batches packed ahead of the device
     log_every: int = 10                # metrics-drain (host sync) period
@@ -71,9 +76,26 @@ class Trainer:
         self.cfg = cfg
         self.timer = timer or XPUTimer()
         self.detector = SpikeDetector(cfg.spike)
-        self.step_fn = runner.jit_train_step(
-            pipeline.cfg.batch_size, cfg.opt, accum_steps=cfg.accum_steps,
-            spike_guard=cfg.spike, donate=cfg.donate)
+        if cfg.bs_warmup is not None:
+            # §3.4.1 batch-size warmup through the accumulation dim: the
+            # microbatch shape is pinned to the pipeline's batch_size and
+            # the staged cache compiles one step per distinct accum count
+            assert cfg.bs_warmup.microbatch == pipeline.cfg.batch_size, (
+                f"bs_warmup.microbatch={cfg.bs_warmup.microbatch} must "
+                f"equal pipeline batch_size={pipeline.cfg.batch_size}")
+            self.staged = runner.jit_train_step(
+                pipeline.cfg.batch_size, cfg.opt,
+                accum_steps=cfg.bs_warmup.stages(),
+                spike_guard=cfg.spike, donate=cfg.donate)
+            self._accum = cfg.bs_warmup.accum_for(0)
+            self.step_fn = self.staged.for_accum(self._accum)
+        else:
+            self.staged = None
+            self._accum = cfg.accum_steps
+            self.step_fn = runner.jit_train_step(
+                pipeline.cfg.batch_size, cfg.opt,
+                accum_steps=cfg.accum_steps,
+                spike_guard=cfg.spike, donate=cfg.donate)
         self.params = runner.init_params(cfg.seed)
         self.opt_state = adamw.init_opt_state(self.params)
         self.guard_state = spikes_lib.init_guard_state()
@@ -81,8 +103,9 @@ class Trainer:
         self.step = 0                  # next step index to execute
         self.history: List[Dict[str, float]] = []
         self.metric_drains = 0         # host metric transfers (tested)
-        self._pending: List[Any] = []  # (step, lr, device-metrics)
-        self._inflight: Dict[int, Any] = {}   # step -> host batch (retry)
+        # one record per dispatched-but-undrained step
+        self._pending: List[Any] = []  # (step, lr, device-metrics, accum,
+                                       #  host batch for the retry lane)
         self._prefetcher: Optional[Prefetcher] = None
         self._preload: List[Dict] = []
         self.pcache = None
@@ -91,11 +114,22 @@ class Trainer:
             self.pcache = PCache(cfg.checkpoint_dir)
 
     # -- data ----------------------------------------------------------------
+    def _accum_for(self, step: int) -> int:
+        """Accumulation count scheduled for global step `step`."""
+        if self.cfg.bs_warmup is not None:
+            return self.cfg.bs_warmup.accum_for(step)
+        return self.cfg.accum_steps
+
     def _ensure_prefetcher(self):
         if self._prefetcher is None:
-            accum = self.cfg.accum_steps
+            # the producer packs for step `step + len(preload) + k`: any
+            # preloaded (restored) batches cover the steps in between, so
+            # each prefetched macrobatch lands at the granularity the
+            # warmup schedules for the step that will consume it
+            produce_step = itertools.count(self.step + len(self._preload))
             self._prefetcher = Prefetcher(
-                lambda: self.pipeline.next_macrobatch(accum),
+                lambda: self.pipeline.next_macrobatch(
+                    self._accum_for(next(produce_step))),
                 depth=max(1, self.cfg.prefetch_depth),
                 preload=self._preload)
             self._preload = []
@@ -107,16 +141,26 @@ class Trainer:
         `restore` it is the remainder of the original schedule — resuming
         never overshoots the LR schedule's total."""
         cfg = self.cfg
-        end = n_steps or cfg.n_steps
+        # explicit None check: train(0) is a no-op, not "run cfg.n_steps"
+        end = cfg.n_steps if n_steps is None else n_steps
         if self.step >= end:
             return self.history
         self._ensure_prefetcher()
         while self.step < end:
             i = self.step
+            accum = self._accum_for(i)
+            if self.staged is not None and accum != self._accum:
+                # warmup stage boundary: swap in the (cached) compiled
+                # step for the new accum count — no recompilation when
+                # the stage was already visited (e.g. after restore)
+                self._accum = accum
+                self.step_fn = self.staged.for_accum(accum)
             with self.timer.span("data"):
                 batch = self._prefetcher.get()
                 jbatch = {k: jnp.asarray(v) for k, v in batch.items()}
-            lr = float(cfg.lr_schedule(i)) * self.detector.lr_scale_for(i)
+            sched = cfg.lr_schedule
+            lr = (sched.host(i) if hasattr(sched, "host")
+                  else float(sched(i))) * self.detector.lr_scale_for(i)
             with self.timer.span("step"):
                 # async dispatch: no host sync here — the device decides
                 # commit/discard itself, metrics stay on device.
@@ -125,14 +169,13 @@ class Trainer:
                     self.params, self.opt_state, self.guard_state, jbatch,
                     jnp.int32(i), jax.random.fold_in(self.rng, i),
                     jnp.float32(lr))
-            self._pending.append((i, lr, metrics))
-            self._inflight[i] = batch
+            self._pending.append((i, lr, metrics, accum, batch))
             self.step += 1
             ckpt = bool(self.pcache is not None and cfg.checkpoint_every
                         and self.step % cfg.checkpoint_every == 0)
             # log_every=0 means "no periodic logging" (seed semantics), not
             # "no policy": fall back to per-step drains so spike
-            # retry/LR-halving never starve and _inflight stays bounded
+            # retry/LR-halving never starve and _pending stays bounded
             if (self.step % (cfg.log_every or 1) == 0
                     or ckpt or self.step >= end):
                 self._drain()
@@ -148,14 +191,13 @@ class Trainer:
         if not self._pending:
             return
         with self.timer.span("drain"):
-            host = jax.device_get([m for _, _, m in self._pending])
+            host = jax.device_get([m for _, _, m, _, _ in self._pending])
         self.metric_drains += 1
         self.timer.count("metric_drain")
         n_commit = 0
-        for (i, lr, _), mh in zip(self._pending, host):
+        for (i, lr, _, accum, batch), mh in zip(self._pending, host):
             loss = float(mh["loss"])
             committed = bool(mh.get("commit", 1.0) >= 0.5)
-            batch = self._inflight.pop(i, None)
             # the batch payload lives only in the pipeline's retry lane —
             # the detector records the event, not the data (a second copy
             # would grow without bound and bloat every host checkpoint)
@@ -166,7 +208,7 @@ class Trainer:
                 # §3.4.4: the update was already discarded on device;
                 # host side re-injects the data later
                 if batch is not None:
-                    self.pipeline.push_retry(batch)
+                    self.pipeline.push_retry(batch, accum)
                 self.timer.count("spike_skipped")
             rec = {"step": i, "loss": loss, "lr": lr,
                    "skipped": not committed,
@@ -178,7 +220,6 @@ class Trainer:
                       f"{'' if committed else ' SKIP'}", flush=True)
         self.timer.gauge("commit_frac", n_commit / len(host))
         self._pending.clear()
-        self._inflight.clear()
 
     # -- checkpointing ---------------------------------------------------------
     def save(self, name: str) -> str:
@@ -203,6 +244,7 @@ class Trainer:
                                 "guard": self.guard_state}, block=False)
         self.pcache.save_host(name, {
             "step": self.step,
+            "accum_stage": self._accum_for(self.step),
             "pipeline": pipe_state,
             "prefetched": prefetched,
             "detector": self.detector.state_dict(),
@@ -245,11 +287,17 @@ class Trainer:
             tree["guard"], sharding.replicated_specs(tree["guard"]))
         host = self.pcache.load_host(name)
         self.step = host["step"]
+        if self.staged is not None:
+            # resume mid-warmup at the exact stage: the sidecar carries
+            # the accum count for the next step (falling back to the
+            # schedule, which is deterministic in the step counter)
+            self._accum = host.get("accum_stage",
+                                   self._accum_for(self.step))
+            self.step_fn = self.staged.for_accum(self._accum)
         self.pipeline.load_state_dict(host["pipeline"])
         self.detector.load_state_dict(host["detector"])
         self._preload = list(host["prefetched"])
         self._pending.clear()
-        self._inflight.clear()
         return name
 
     def close(self):

@@ -309,7 +309,7 @@ def test_log_every_zero_still_applies_policy_per_step():
     tr.close()
     assert len(hist) == N
     assert tr.metric_drains == N
-    assert not tr._inflight and not tr._pending
+    assert not tr._pending
 
 
 def test_pipeline_state_roundtrip_continues_stream():
