@@ -13,6 +13,7 @@ Paper artifacts covered:
   babel_metadata     parallel metadata prefetch (36x claim shape)
   babel_crc          sampled-CRC vs full-MD5 verification
   table3_flood       Flood pipeline vs synchronous baseline token/s
+  serve_online       online continuous batching: TTFT/ITL/tok/s vs load
   dpo_packing        DPO data packing (3.7x claim)
   table1_hetero      heterogeneous cost model (20% savings claim)
   fig12_13_scaling   hyper-param + loss scaling laws, MoE efficiency lever
@@ -31,9 +32,9 @@ import time
 
 BENCHES = [
     "fig4_xputimer", "fig8_edit", "table2_pcache", "babel_metadata",
-    "babel_crc", "table3_flood", "dpo_packing", "table1_hetero",
-    "fig12_13_scaling", "fig14_spikes", "fig18_eval", "kernels",
-    "train_step", "roofline",
+    "babel_crc", "table3_flood", "serve_online", "dpo_packing",
+    "table1_hetero", "fig12_13_scaling", "fig14_spikes", "fig18_eval",
+    "kernels", "train_step", "roofline",
 ]
 
 

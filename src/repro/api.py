@@ -165,10 +165,12 @@ class Runner:
                                 / jnp.maximum(gnorm, 1e-12))
             commit = None
             if spike_guard is not None:
-                # loss is the psum'd global loss -> identical on every
-                # rank, so the replicated guard state stays consistent.
+                # loss and gnorm are psum'd global statistics -> identical
+                # on every rank, so the replicated guard state stays
+                # consistent.  gnorm participates only when the config
+                # keys the guard on it (§3.4.4 fn2).
                 commit, guard_state = spikes_lib.guard_commit(
-                    spike_guard, guard_state, loss)
+                    spike_guard, guard_state, loss, gnorm=gnorm)
             params, opt_state = adamw.apply_updates(
                 params, grads, opt_state, lr, opt_cfg, grad_scale=scale,
                 commit=commit)
@@ -187,7 +189,8 @@ class Runner:
             out_specs = (pspecs, ospecs, P())
             return _shard_map(step_fn, self.mesh, in_specs, out_specs)
 
-        gspecs = sharding.replicated_specs(spikes_lib.init_guard_state())
+        gspecs = sharding.replicated_specs(
+            spikes_lib.init_guard_state(spike_guard))
 
         def guarded_step_fn(params, opt_state, guard_state, batch, step,
                             rng, lr):
@@ -331,6 +334,62 @@ class Runner:
         out_specs = (P(b), cache_specs)
         return _shard_map(fn, self.mesh, in_specs, out_specs), cache_specs
 
+    # -- paged decode / chunked prefill (online serving) -----------------------
+    def init_paged_pools(self, n_pages: int, page_size: int):
+        """Materialize the paged KV pools, sharded per `paged_cache_specs`
+        (the page_size dim is split over tp: rank r owns in-page offsets
+        [r*ps_loc, (r+1)*ps_loc), preserving the dense decode cache's 1/tp
+        memory sharding).  Page 0 is the scratch page — the online
+        engine's allocator never hands it out."""
+        if page_size % self.env.tp:
+            raise ValueError(f"page_size={page_size} must be divisible by "
+                             f"tp={self.env.tp} (in-page offset sharding)")
+        specs = paged_cache_specs(self.cfg, self.env)
+        shardings = jax.tree.map(
+            lambda s: jax.sharding.NamedSharding(self.mesh, s), specs,
+            is_leaf=lambda x: isinstance(x, P))
+        return jax.jit(
+            lambda: M.init_paged_caches(self.cfg, self.env, n_pages,
+                                        page_size),
+            out_shardings=shardings)()
+
+    def make_paged_decode_step(self, page_size: int):
+        """Fixed-shape paged decode tick over the slot batch:
+        ``(params, pools, token (B,), pos (B,), table (B, n_lp),
+        active (B,)) -> (next (B,), pools)``.  B (= max_slots) and the
+        table width are fixed by the arrays the caller jits with; slot
+        membership lives entirely in the data (table/active), so the
+        online engine admits, finishes, and preempts requests without
+        ever recompiling."""
+        cfg, env, flags = self.cfg, self.env, self.flags
+        pspecs = paged_cache_specs(cfg, env)
+
+        def fn(params, pools, token, pos, table, active):
+            return M.paged_decode_step(cfg, env, params, pools, token, pos,
+                                       table, active, page_size=page_size,
+                                       flags=flags)
+
+        in_specs = (self.specs, pspecs, P(), P(), P(), P())
+        out_specs = (P(), pspecs)
+        return _shard_map(fn, self.mesh, in_specs, out_specs)
+
+    def make_paged_prefill(self, page_size: int):
+        """Fixed-shape chunked-prefill step for one request:
+        ``(params, pools, tokens (C,), base, n_valid, table_row (n_lp,))
+        -> (next_token, pools)`` — C is the fixed chunk size the caller
+        jits with (short chunks arrive padded with n_valid < C)."""
+        cfg, env, flags = self.cfg, self.env, self.flags
+        pspecs = paged_cache_specs(cfg, env)
+
+        def fn(params, pools, tokens, base, n_valid, table_row):
+            return M.paged_prefill_chunk(cfg, env, params, pools, tokens,
+                                         base, n_valid, table_row,
+                                         page_size=page_size, flags=flags)
+
+        in_specs = (self.specs, pspecs, P(), P(), P(), P())
+        out_specs = (P(), pspecs)
+        return _shard_map(fn, self.mesh, in_specs, out_specs)
+
     def init_cache_shapes(self, global_batch: int, seq_len: int):
         """GLOBAL cache ShapeDtypeStructs (local shapes scaled up by the
         mesh axis sizes named in each leaf's PartitionSpec)."""
@@ -426,6 +485,21 @@ def globalize_shapes(shape_tree, spec_tree, mesh_sizes):
 
     return jax.tree.unflatten(
         treedef, [scale(sd, sp) for sd, sp in zip(shape_leaves, spec_leaves)])
+
+
+def paged_cache_specs(cfg, env: AxisEnv):
+    """PartitionSpecs for the paged KV pools (serving/online.py).
+
+    Pool layout per layer: (n_pages, page_size, KV, hd) with the page_size
+    dim sharded over tp (each rank stores ps_loc = page_size/tp offsets of
+    every page); uniform archs carry a leading layer dim."""
+    lead = 1 if (cfg.uniform_blocks and not cfg.is_encoder_decoder) else 0
+    one = {"self": {"k": P(*([None] * lead), None, env.tp_axis, None, None),
+                    "v": P(*([None] * lead), None, env.tp_axis, None,
+                           None)}}
+    if lead:
+        return one
+    return [one for _ in range(cfg.n_layers)]
 
 
 def cache_partition_specs(cfg, env: AxisEnv, cache_tree, b):

@@ -39,6 +39,13 @@ class SpikeConfig:
     lr_reduce_factor: float = 0.5    # persistent spike LR response
     lr_reduce_steps: int = 50        # steps the reduction stays active
     warmup_steps: int = 20           # no detection before stats settle
+    # §3.4.4 footnote 2: some spikes show up in the gradient norm before
+    # (or without) the loss moving.  When set, the device guard also
+    # carries an EMA over the clipped-update grad norm and vetoes the
+    # commit when grad_norm > mean + gnorm_sigma_threshold * std (or is
+    # non-finite).  None keeps the loss-only guard — and the original
+    # 4-leaf guard state, so existing checkpoints/tests are unaffected.
+    gnorm_sigma_threshold: Optional[float] = None
 
 
 # ---------------------------------------------------------------------------
@@ -46,16 +53,25 @@ class SpikeConfig:
 # ---------------------------------------------------------------------------
 
 
-def init_guard_state() -> Dict[str, jnp.ndarray]:
-    """Replicated device-side EMA state carried through the train step."""
-    return {"mean": jnp.zeros((), jnp.float32),
-            "var": jnp.full((), 0.25, jnp.float32),
-            "n": jnp.zeros((), jnp.int32),
-            "seeded": jnp.zeros((), jnp.int32)}
+def init_guard_state(cfg: Optional["SpikeConfig"] = None
+                     ) -> Dict[str, jnp.ndarray]:
+    """Replicated device-side EMA state carried through the train step.
+    With a gnorm-keyed config the state grows a second EMA pair
+    (gmean/gvar) for the grad-norm statistic; the default stays the
+    4-leaf loss-only pytree."""
+    state = {"mean": jnp.zeros((), jnp.float32),
+             "var": jnp.full((), 0.25, jnp.float32),
+             "n": jnp.zeros((), jnp.int32),
+             "seeded": jnp.zeros((), jnp.int32)}
+    if cfg is not None and cfg.gnorm_sigma_threshold is not None:
+        state["gmean"] = jnp.zeros((), jnp.float32)
+        state["gvar"] = jnp.full((), 0.25, jnp.float32)
+    return state
 
 
 def guard_commit(cfg: "SpikeConfig", state: Dict[str, jnp.ndarray],
-                 loss: jnp.ndarray):
+                 loss: jnp.ndarray,
+                 gnorm: Optional[jnp.ndarray] = None):
     """Pure jnp commit decision (mirrors `SpikeDetector.is_spike`).
 
     Returns ``(commit, new_state)``: ``commit`` is a bool scalar — False
@@ -65,6 +81,13 @@ def guard_commit(cfg: "SpikeConfig", state: Dict[str, jnp.ndarray],
     detector; the first *committed* observation seeds mean=loss, var=0.25
     (`seeded` tracks this so e.g. a non-finite step-0 loss cannot poison
     the EMA or steal the seed).
+
+    With ``cfg.gnorm_sigma_threshold`` set and a `gnorm` passed, a second
+    EMA over the grad norm vetoes the commit symmetrically (§3.4.4 fn2:
+    grad-norm spikes that precede — or never reach — the loss).  Both
+    statistics gate one shared commit flag, and only committed steps
+    update either EMA, so a spike in one channel cannot poison the other
+    channel's statistics.
     """
     loss = loss.astype(jnp.float32)
     first = state["seeded"] == 0
@@ -76,17 +99,37 @@ def guard_commit(cfg: "SpikeConfig", state: Dict[str, jnp.ndarray],
     spike = (~warm) & ((loss > mean + cfg.sigma_threshold * std)
                        | (loss - mean > cfg.abs_threshold))
     commit = (~spike) & jnp.isfinite(loss)
+
+    use_gnorm = (cfg.gnorm_sigma_threshold is not None
+                 and "gmean" in state and gnorm is not None)
+    if use_gnorm:
+        gnorm = gnorm.astype(jnp.float32)
+        gmean = jnp.where(first, gnorm, state["gmean"])
+        gstd = jnp.maximum(jnp.sqrt(state["gvar"]), 1e-3)
+        gspike = (~warm) & (gnorm > gmean
+                            + cfg.gnorm_sigma_threshold * gstd)
+        commit = commit & (~gspike) & jnp.isfinite(gnorm)
+
     d = cfg.ema_decay
     delta = loss - mean
     # non-committed losses fall back to the *stored* stats
-    new_mean = jnp.where(commit, mean + (1 - d) * delta, state["mean"])
-    new_var = jnp.where(commit & ~first,
-                        d * state["var"] + (1 - d) * delta * delta,
-                        state["var"])
-    new_seeded = jnp.where(commit, jnp.ones_like(state["seeded"]),
-                           state["seeded"])
-    return commit, {"mean": new_mean, "var": new_var,
-                    "n": state["n"] + 1, "seeded": new_seeded}
+    new_state = dict(state)
+    new_state["mean"] = jnp.where(commit, mean + (1 - d) * delta,
+                                  state["mean"])
+    new_state["var"] = jnp.where(commit & ~first,
+                                 d * state["var"] + (1 - d) * delta * delta,
+                                 state["var"])
+    new_state["n"] = state["n"] + 1
+    new_state["seeded"] = jnp.where(commit, jnp.ones_like(state["seeded"]),
+                                    state["seeded"])
+    if use_gnorm:
+        gdelta = gnorm - gmean
+        new_state["gmean"] = jnp.where(commit, gmean + (1 - d) * gdelta,
+                                       state["gmean"])
+        new_state["gvar"] = jnp.where(
+            commit & ~first, d * state["gvar"] + (1 - d) * gdelta * gdelta,
+            state["gvar"])
+    return commit, new_state
 
 
 @dataclasses.dataclass

@@ -139,6 +139,29 @@ def moe_fused_ffn(x, w1, w2, w3, tok, gate, group_sizes, *,
                              act=act, bf=bf_, interpret=interpret)
 
 
+def paged_gather(pool, table):
+    """Gather KV pages for paged-attention decode (serving/online.py).
+
+    pool (n_pages, ps_loc, ...) is a device-resident page pool whose
+    in-page offset dim is the tp-local slice of the global page_size;
+    table (..., n_lp) holds the physical page id backing each logical
+    page (0 = the reserved scratch page, which doubles as the
+    "unallocated" sentinel — callers mask those positions).  Returns
+    (..., n_lp, ps_loc, ...): each slot's logical KV sequence assembled
+    in logical-page order, so reshaping the two page dims together
+    yields a dense (S, ...) cache view the standard decode-attention
+    einsums consume unchanged.
+
+    This is a pure gather along the page dim — on TPU it lowers to a
+    dynamic-slice DMA per page row, the same access pattern the fused
+    MoE kernel's row gather uses; a dedicated Mosaic kernel that fuses
+    the gather into the attention QK matmul is a ROADMAP follow-up
+    (today XLA fuses the take into the consumer in interpret and
+    compiled modes alike).
+    """
+    return jnp.take(pool, table, axis=0)
+
+
 # ---------------------------------------------------------------------------
 # EP token exchange: custom-vjp all-to-all for the expert-parallel MoE path
 # ---------------------------------------------------------------------------

@@ -1,16 +1,26 @@
-"""Serving launcher: Flood offline inference over a model's decode step.
+"""Serving launcher: offline (Flood) and online continuous-batching modes.
 
+    # offline: Flood pipeline engine over a fixed request set
     PYTHONPATH=src python -m repro.launch.serve --arch ling-lite --smoke \
         --requests 16 --max-new 16
 
-Builds the model, splits its layers into pipeline stages, and drives the
-FloodEngine (segment KV cache, S+1 in-flight micro-batches).  A
-`--baseline` flag runs the synchronous global-batch engine instead for the
-Table-3-shaped comparison.
+    # online: continuous batching + paged KV + Poisson load generator
+    PYTHONPATH=src python -m repro.launch.serve --arch ling-lite --smoke \
+        --online --rates 4,16 --requests 24 --max-new 8
+
+Offline builds the model, splits its layers into pipeline stages, and
+drives the FloodEngine (segment KV cache, S+1 in-flight micro-batches);
+`--baseline` runs the synchronous global-batch engine instead for the
+Table-3-shaped comparison.  Online drives the `OnlineEngine`
+(docs/serving.md): slot-based continuous batching over a paged device KV
+cache, measured under Poisson arrivals at each `--rates` entry — TTFT /
+inter-token-latency percentiles and sustained tok/s land in
+BENCH_serve_online.json (`--report` to relocate).
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +32,8 @@ from repro.launch.mesh import make_local_mesh
 from repro.models import model as M
 from repro.serving.flood import (FloodEngine, GenRequest,
                                  baseline_step_engine, quantize_microbatch)
+from repro.serving.online import (OnlineConfig, OnlineEngine,
+                                  run_poisson_load)
 from repro.serving.segment_cache import SegmentCache
 
 
@@ -64,6 +76,56 @@ def build_model_engine(cfg, mesh, n_stages: int, seq_len: int,
     return embed_fn, [stage_fn(i) for i in range(n_stages)], head_fn
 
 
+def run_online(cfg, mesh, flags, args) -> None:
+    """Online continuous batching under a Poisson load at each rate."""
+    runner = api.Runner(cfg, mesh, fsdp=False, seq_parallel=False,
+                        max_seq=args.seq, flags=flags)
+    params = runner.init_params(0)
+    ocfg = OnlineConfig(
+        max_slots=quantize_microbatch(args.slots, args.tp),
+        max_context=args.seq, page_size=args.page_size,
+        n_pages=args.pages,
+        prefill_chunk=quantize_microbatch(args.prefill_chunk, args.tp))
+    eng = OnlineEngine(runner, params, ocfg)
+    # one engine serves every rate (the pool drains between loads); a
+    # small warm-up load eats the two XLA compiles so the reported
+    # percentiles measure scheduling, not compilation
+    run_poisson_load(eng, rate=100.0, n_requests=2,
+                     prompt_len=args.prompt_len, max_new=2,
+                     vocab_size=cfg.vocab_size, seed=7)
+    cases = []
+    for rate in (float(r) for r in args.rates.split(",")):
+        rep = run_poisson_load(eng, rate=rate, n_requests=args.requests,
+                               prompt_len=args.prompt_len,
+                               max_new=args.max_new,
+                               vocab_size=cfg.vocab_size)
+        print(f"[online] rate={rate:g}/s tok/s={rep['tok_s']:.1f} "
+              f"ttft p50/p99={rep['ttft_p50_ms']:.0f}/"
+              f"{rep['ttft_p99_ms']:.0f}ms itl p50/p99="
+              f"{rep['itl_p50_ms']:.1f}/{rep['itl_p99_ms']:.1f}ms "
+              f"preempts={rep['preemptions']}")
+        cases.append(rep)
+    out = {
+        "bench": "online continuous-batching serving (paged KV)",
+        "arch": cfg.arch_id + (" smoke" if args.smoke else ""),
+        "command": "PYTHONPATH=src python -m repro.launch.serve --online",
+        # report the geometry the engine actually ran, not the raw CLI
+        # values (slots/chunk are tp-quantized, n_pages defaulted)
+        "engine": {"max_slots": ocfg.max_slots,
+                   "page_size": ocfg.page_size,
+                   "n_pages": ocfg.pool_pages(),
+                   "prefill_chunk": ocfg.prefill_chunk,
+                   "max_context": ocfg.max_context,
+                   "tp": args.tp, "moe_dispatch": args.moe_dispatch},
+        "note": ("interpret-mode CPU wall clock - scheduling/latency "
+                 "shape, NOT TPU performance"),
+        "rates": cases,
+    }
+    with open(args.report, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"[online] report -> {args.report}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="ling-lite")
@@ -75,6 +137,23 @@ def main():
     ap.add_argument("--stages", type=int, default=2)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--baseline", action="store_true")
+    ap.add_argument("--online", action="store_true",
+                    help="continuous-batching engine + Poisson load "
+                         "generator (docs/serving.md)")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="online: decode slots (rounded up to tp)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="online: KV page size in tokens")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="online: physical page pool size (default: every "
+                         "slot can hold a full --seq context)")
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="online: prompt tokens prefix-filled per tick")
+    ap.add_argument("--rates", default="4,16",
+                    help="online: comma-separated Poisson arrival rates "
+                         "(req/s), one load run each")
+    ap.add_argument("--report", default="BENCH_serve_online.json",
+                    help="online: where the load report JSON lands")
     ap.add_argument("--tp", type=int, default=1,
                     help="tp mesh width (needs that many jax devices, e.g. "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
@@ -88,6 +167,9 @@ def main():
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     mesh = make_local_mesh(1, args.tp)
     flags = M.RunFlags(moe_dispatch=args.moe_dispatch)
+    if args.online:
+        run_online(cfg, mesh, flags, args)
+        return
     rs = np.random.RandomState(0)
     reqs = [GenRequest(rid=i,
                        prompt=rs.randint(0, cfg.vocab_size,

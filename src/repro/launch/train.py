@@ -61,6 +61,12 @@ def main():
                     help="MoE train dispatch; 'ep' routes tokens over the "
                          "mesh via the all-to-all expert-parallel path "
                          "(tp > 1)")
+    ap.add_argument("--spike-gnorm-sigma", type=float, default=None,
+                    metavar="SIGMA",
+                    help="also key the device-side spike guard on the "
+                         "grad norm (§3.4.4 fn2): skip the update when "
+                         "grad_norm > EMA mean + SIGMA * std (default: "
+                         "loss-only guard)")
     ap.add_argument("--no-donate", action="store_true",
                     help="disable params/opt buffer donation (debugging)")
     ap.add_argument("--checkpoint-dir", default=None)
@@ -87,6 +93,8 @@ def main():
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     mesh = make_local_mesh(args.dp, args.tp)
     flags = M.RunFlags(moe_dispatch=args.moe_dispatch)
+    spike_cfg = spikes_lib.SpikeConfig(
+        gnorm_sigma_threshold=args.spike_gnorm_sigma)
     runner = api.Runner(cfg, mesh, max_seq=args.seq, flags=flags)
     pipe = DataPipeline(PipelineConfig(vocab_size=cfg.vocab_size,
                                        seq_len=args.seq,
@@ -96,7 +104,6 @@ def main():
         # EDiT workers reuse the same engine step builder as the trainer:
         # donated, spike-guarded, accumulation-aware.  Each worker's opaque
         # opt slot carries (adamw state, device guard state).
-        spike_cfg = spikes_lib.SpikeConfig()
         step = runner.jit_train_step(args.batch, accum_steps=args.accum,
                                      spike_guard=spike_cfg,
                                      donate=not args.no_donate)
@@ -105,7 +112,7 @@ def main():
         def worker_step(w, opt, batch, i, lr):
             if opt is None:
                 opt = (adamw.init_opt_state(w),
-                       spikes_lib.init_guard_state())
+                       spikes_lib.init_guard_state(spike_cfg))
             o, g = opt
             jb = {k: jnp.asarray(v) for k, v in batch.items()}
             w, o, g, m = step(w, o, g, jb, jnp.int32(i),
@@ -126,6 +133,7 @@ def main():
             n_steps=args.steps,
             lr_schedule=WSDSchedule(max_lr=args.lr, warmup_steps=20,
                                     total_steps=max(args.steps, 1)),
+            spike=spike_cfg,
             accum_steps=args.accum,
             bs_warmup=bs_warmup,
             donate=not args.no_donate,

@@ -512,26 +512,10 @@ def decode_attention(cfg, env: AxisEnv, params: Params, x: jax.Array,
         cache = {"k": upd(cache["k"], k_new.astype(cdt)),
                  "v": upd(cache["v"], v_new.astype(cdt))}
 
-    # score all padded heads against the local S slice.  Fast path: when no
-    # head padding happened and heads group evenly onto kv heads, reshape q
-    # into (kv, group) and contract against the cache directly — no
-    # expanded/gathered KV copy ever hits HBM (big decode-bandwidth win,
-    # see EXPERIMENTS.md §Perf).
-    grouped = (ad.n_heads == ad.heads_padded
-               and ad.heads_padded % ad.n_kv == 0)
-    if grouped:
-        g = ad.heads_padded // ad.n_kv
-        q_g = q_all.reshape(B, ad.n_kv, g, hd)
-        s = jnp.einsum("bkgd,bskd->bkgs", q_g, cache["k"],
-                       preferred_element_type=jnp.float32) * hd ** -0.5
-        s = s.reshape(B, ad.heads_padded, s_loc)
-    else:
-        group = max(ad.n_heads // ad.n_kv, 1)
-        hp_kv = jnp.minimum(jnp.arange(ad.heads_padded) // group,
-                            ad.n_kv - 1)
-        k_exp = jnp.take(cache["k"], hp_kv, axis=2)       # (B,S_loc,Hp,hd)
-        s = jnp.einsum("bhd,bshd->bhs", q_all, k_exp,
-                       preferred_element_type=jnp.float32) * hd ** -0.5
+    # score all padded heads against the local S slice, then the shared
+    # online-softmax combine (`_decode_scores_combine` — also the paged
+    # serving path's tail, so dense/paged decode parity holds by
+    # construction).
     kpos = r * s_loc + jnp.arange(s_loc)
     if cross:
         valid = jnp.ones((s_loc,), bool)
@@ -543,30 +527,9 @@ def decode_attention(cfg, env: AxisEnv, params: Params, x: jax.Array,
         valid = kpos < n_written
     else:
         valid = kpos <= pos
-    s = jnp.where(valid[None, None, :], s, -jnp.inf)
-
-    m_loc = jnp.max(s, axis=-1)
-    m = env.pmax_tp(m_loc)
-    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
-    p = jnp.where(valid[None, None, :], jnp.exp(s - m_safe[..., None]), 0.0)
-    # p in compute dtype for the PV contraction (flash-kernel convention):
-    # avoids materializing an f32 copy of the cache-sized V
-    p_c = p.astype(cdt)
-    if grouped:
-        p_g = p_c.reshape(B, ad.n_kv, ad.heads_padded // ad.n_kv, s_loc)
-        num = jnp.einsum("bkgs,bskd->bkgd", p_g, cache["v"],
-                         preferred_element_type=jnp.float32)
-        num = num.reshape(B, ad.heads_padded, hd)
-    else:
-        group = max(ad.n_heads // ad.n_kv, 1)
-        hp_kv = jnp.minimum(jnp.arange(ad.heads_padded) // group,
-                            ad.n_kv - 1)
-        v_exp = jnp.take(cache["v"], hp_kv, axis=2)
-        num = jnp.einsum("bhs,bshd->bhd", p_c, v_exp,
-                         preferred_element_type=jnp.float32)
-    den = jnp.sum(p, axis=-1)
-    num, den = env.psum_tp((num, den))
-    attn = (num / jnp.maximum(den, 1e-20)[..., None]).astype(cdt)  # (B,Hp,hd)
+    attn = _decode_scores_combine(
+        cfg, env, ad, q_all, cache["k"], cache["v"],
+        jnp.broadcast_to(valid[None, :], (B, s_loc)), cdt)  # (B,Hp,hd)
 
     # row-parallel output projection on the local head slice
     lo = r * ad.local_heads
@@ -578,3 +541,224 @@ def decode_attention(cfg, env: AxisEnv, params: Params, x: jax.Array,
 def expand_cache_from_prefill(prefill_cache):
     """Prefill emits (B, S_loc, KV, hd) slices already in decode layout."""
     return prefill_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged KV attention (online serving)
+# ---------------------------------------------------------------------------
+#
+# The online engine (serving/online.py) stores the decode KV cache as a
+# slot-agnostic *page pool* instead of a dense (B, S) tensor: pool k/v are
+# (n_pages, ps_loc, KV, hd) with the in-page offset dim sharded over tp
+# (ps_loc = page_size // tp — rank r owns offsets [r*ps_loc, (r+1)*ps_loc)
+# of every page, preserving the dense path's 1/tp cache-memory sharding).
+# A per-slot page table maps logical page -> physical page; admission,
+# completion, and preemption are pure table/mask updates, so the jitted
+# step never recompiles.  Physical page 0 is reserved as a scratch page:
+# masked lanes (inactive slots, non-owning ranks) land their writes there,
+# which keeps every pool update a plain vectorized scatter.
+
+
+def init_paged_kv_pool(cfg, n_pages: int, page_size: int
+                       ) -> Dict[str, jax.Array]:
+    """GLOBAL paged KV pool for one attention layer (zeros).  The serving
+    Runner shards the page_size dim over tp via `api.paged_cache_specs`."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    hd = cfg.head_dim or cfg.d_model // cfg.n_heads
+    shape = (n_pages, page_size, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, cdt), "v": jnp.zeros(shape, cdt)}
+
+
+def _paged_geometry(pool, table_width: int, page_size: int, env: AxisEnv):
+    """(ps_loc, S_g, gpos): gathered length and the global sequence
+    position of every gathered row on this rank.  Gathered row j of
+    logical page i sits at position i*page_size + r*ps_loc + j."""
+    ps_loc = pool["k"].shape[1]
+    S_g = table_width * ps_loc
+    j = jnp.arange(S_g)
+    gpos = ((j // ps_loc) * page_size + env.tp_index() * ps_loc
+            + j % ps_loc)
+    return ps_loc, S_g, gpos
+
+
+def _paged_write(pool, k_new, v_new, pos, page_table, owns, *,
+                 page_size: int, env: AxisEnv, cdt):
+    """Scatter per-lane KV rows into their pages.
+
+    pos (...,) int32 global positions; page_table broadcastable lookup of
+    the physical page per lane (already resolved by the caller); owns
+    (...,) bool — lanes that are inactive, unallocated, or whose in-page
+    offset belongs to another tp rank write to scratch page 0 instead.
+    """
+    ps_loc = pool["k"].shape[1]
+    r = env.tp_index()
+    o = pos % page_size
+    dest = jnp.where(owns, page_table, 0)
+    o_loc = jnp.clip(o - r * ps_loc, 0, ps_loc - 1)
+    return {"k": pool["k"].at[dest, o_loc].set(k_new.astype(cdt)),
+            "v": pool["v"].at[dest, o_loc].set(v_new.astype(cdt))}
+
+
+def _decode_scores_combine(cfg, env: AxisEnv, ad: AttnDims, q_all, k_g, v_g,
+                           valid, cdt):
+    """Shared decode-attention tail for BOTH the dense S-sharded cache
+    and the paged pools: masked scores + online-softmax (num, den) psum
+    over tp + normalize.  q_all (B, Hp, hd); k_g/v_g (B, S, KV, hd);
+    valid (B, S).  Fast path: when no head padding happened and heads
+    group evenly onto kv heads, q reshapes to (kv, group) and contracts
+    against the cache directly — no expanded KV copy ever hits HBM (big
+    decode-bandwidth win, see EXPERIMENTS.md §Perf); p stays in compute
+    dtype for the PV contraction (flash-kernel convention) so no f32
+    copy of the cache-sized V materializes either."""
+    hd = ad.head_dim
+    B, S_g = valid.shape
+    grouped = (ad.n_heads == ad.heads_padded
+               and ad.heads_padded % ad.n_kv == 0)
+    if grouped:
+        g = ad.heads_padded // ad.n_kv
+        q_g = q_all.reshape(B, ad.n_kv, g, hd)
+        s = jnp.einsum("bkgd,bskd->bkgs", q_g, k_g,
+                       preferred_element_type=jnp.float32) * hd ** -0.5
+        s = s.reshape(B, ad.heads_padded, S_g)
+    else:
+        group = max(ad.n_heads // ad.n_kv, 1)
+        hp_kv = jnp.minimum(jnp.arange(ad.heads_padded) // group,
+                            ad.n_kv - 1)
+        k_exp = jnp.take(k_g, hp_kv, axis=2)
+        s = jnp.einsum("bhd,bshd->bhs", q_all, k_exp,
+                       preferred_element_type=jnp.float32) * hd ** -0.5
+    s = jnp.where(valid[:, None, :], s, -jnp.inf)
+    m_loc = jnp.max(s, axis=-1)
+    m = env.pmax_tp(m_loc)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.where(valid[:, None, :], jnp.exp(s - m_safe[..., None]), 0.0)
+    p_c = p.astype(cdt)
+    if grouped:
+        p_g = p_c.reshape(B, ad.n_kv, ad.heads_padded // ad.n_kv, S_g)
+        num = jnp.einsum("bkgs,bskd->bkgd", p_g, v_g,
+                         preferred_element_type=jnp.float32)
+        num = num.reshape(B, ad.heads_padded, hd)
+    else:
+        group = max(ad.n_heads // ad.n_kv, 1)
+        hp_kv = jnp.minimum(jnp.arange(ad.heads_padded) // group,
+                            ad.n_kv - 1)
+        v_exp = jnp.take(v_g, hp_kv, axis=2)
+        num = jnp.einsum("bhs,bshd->bhd", p_c, v_exp,
+                         preferred_element_type=jnp.float32)
+    den = jnp.sum(p, axis=-1)
+    num, den = env.psum_tp((num, den))
+    return (num / jnp.maximum(den, 1e-20)[..., None]).astype(cdt)
+
+
+def paged_decode_attention(cfg, env: AxisEnv, params: Params, x: jax.Array,
+                           pool: Dict[str, jax.Array], pos: jax.Array,
+                           table: jax.Array, active: jax.Array, *,
+                           page_size: int):
+    """Single-token decode against a paged KV pool.
+
+    x (B, d) replicated over tp (B = max_slots, a fixed shape); pos (B,)
+    int32 position being written per slot; table (B, n_lp) physical page
+    per logical page (0 = unallocated); active (B,) bool.  Writes the new
+    token's KV into its page (masked to the owning rank + scratch page for
+    everyone else), gathers the slot's pages, and runs the same
+    (num, den)-psum online softmax as `decode_attention`.  Returns
+    (partial (B, d), pool)."""
+    ad = AttnDims.build(cfg, env)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    from repro.kernels import ops as kops
+    B = x.shape[0]
+    hd = ad.head_dim
+    n_lp = table.shape[1]
+    ps_loc, S_g, gpos = _paged_geometry(pool, n_lp, page_size, env)
+    r = env.tp_index()
+
+    wq = env.gather_fsdp(params["wq"], 0, dtype=cdt)
+    wk = env.gather_fsdp(params["wk"], 0, dtype=cdt)
+    wv = env.gather_fsdp(params["wv"], 0, dtype=cdt)
+    wo = env.gather_fsdp(params["wo"], 1, dtype=cdt)
+
+    q_local = (x @ wq).reshape(B, ad.local_heads, hd)
+    k_new = (x @ wk).reshape(B, ad.n_kv, hd)
+    v_new = (x @ wv).reshape(B, ad.n_kv, hd)
+    if cfg.use_rope:
+        cos, sin = rope_angles(pos, hd, cfg.rope_theta)      # (B, hd/2)
+        q_local = apply_rope(q_local[:, None], cos[:, None],
+                             sin[:, None])[:, 0]
+        k_new = apply_rope(k_new[:, None], cos[:, None], sin[:, None])[:, 0]
+    q_all = env.all_gather_tp(q_local, axis=1)               # (B, Hp, hd)
+
+    lp = jnp.clip(pos // page_size, 0, n_lp - 1)
+    pp = jnp.take_along_axis(table, lp[:, None], axis=1)[:, 0]
+    owns = active & (pp > 0) & ((pos % page_size) // ps_loc == r)
+    pool = _paged_write(pool, k_new, v_new, pos, pp, owns,
+                        page_size=page_size, env=env, cdt=cdt)
+
+    k_g = kops.paged_gather(pool["k"], table).reshape(B, S_g, ad.n_kv, hd)
+    v_g = kops.paged_gather(pool["v"], table).reshape(B, S_g, ad.n_kv, hd)
+    pvalid = jnp.repeat(table > 0, ps_loc, axis=1)           # (B, S_g)
+    valid = pvalid & (gpos[None, :] <= pos[:, None])
+    attn = _decode_scores_combine(cfg, env, ad, q_all, k_g, v_g, valid, cdt)
+
+    lo = r * ad.local_heads
+    local = jax.lax.dynamic_slice_in_dim(attn, lo, ad.local_heads, axis=1)
+    partial = local.reshape(B, ad.local_heads * hd) @ wo
+    return partial, pool
+
+
+def paged_prefill_attention(cfg, env: AxisEnv, params: Params, x: jax.Array,
+                            pool: Dict[str, jax.Array], base: jax.Array,
+                            n_valid: jax.Array, table_row: jax.Array, *,
+                            page_size: int):
+    """One chunked-prefill attention step for a single request.
+
+    x (C, d) replicated over tp — the chunk's activations; base (scalar)
+    tokens already written for this request; n_valid (scalar) real tokens
+    in the chunk (the tail is padding); table_row (n_lp,) the request's
+    page table.  Writes the chunk's KV into its pages, then each chunk
+    query attends causally over the request's full written history via
+    the page gather.  Returns (partial (C, d), pool)."""
+    ad = AttnDims.build(cfg, env)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    from repro.kernels import ops as kops
+    C = x.shape[0]
+    hd = ad.head_dim
+    n_lp = table_row.shape[0]
+    ps_loc, S_g, gpos = _paged_geometry(pool, n_lp, page_size, env)
+    r = env.tp_index()
+
+    wq = env.gather_fsdp(params["wq"], 0, dtype=cdt)
+    wk = env.gather_fsdp(params["wk"], 0, dtype=cdt)
+    wv = env.gather_fsdp(params["wv"], 0, dtype=cdt)
+    wo = env.gather_fsdp(params["wo"], 1, dtype=cdt)
+
+    posq = base + jnp.arange(C)
+    q_local = (x @ wq).reshape(C, ad.local_heads, hd)
+    k_new = (x @ wk).reshape(C, ad.n_kv, hd)
+    v_new = (x @ wv).reshape(C, ad.n_kv, hd)
+    if cfg.use_rope:
+        cos, sin = rope_angles(posq, hd, cfg.rope_theta)     # (C, hd/2)
+        q_local = apply_rope(q_local[:, None], cos[:, None],
+                             sin[:, None])[:, 0]
+        k_new = apply_rope(k_new[:, None], cos[:, None], sin[:, None])[:, 0]
+    q_all = env.all_gather_tp(q_local, axis=1)               # (C, Hp, hd)
+
+    lp = jnp.clip(posq // page_size, 0, n_lp - 1)
+    pp = jnp.take(table_row, lp)                             # (C,)
+    owns = ((jnp.arange(C) < n_valid) & (pp > 0)
+            & ((posq % page_size) // ps_loc == r))
+    pool = _paged_write(pool, k_new, v_new, posq, pp, owns,
+                        page_size=page_size, env=env, cdt=cdt)
+
+    k_g = kops.paged_gather(pool["k"], table_row).reshape(S_g, ad.n_kv, hd)
+    v_g = kops.paged_gather(pool["v"], table_row).reshape(S_g, ad.n_kv, hd)
+    pvalid = jnp.repeat(table_row > 0, ps_loc)               # (S_g,)
+    valid = pvalid[None, :] & (gpos[None, :] <= posq[:, None])  # (C, S_g)
+    attn = _decode_scores_combine(
+        cfg, env, ad, q_all,
+        jnp.broadcast_to(k_g, (C,) + k_g.shape),
+        jnp.broadcast_to(v_g, (C,) + v_g.shape), valid, cdt)
+
+    lo = r * ad.local_heads
+    local = jax.lax.dynamic_slice_in_dim(attn, lo, ad.local_heads, axis=1)
+    partial = local.reshape(C, ad.local_heads * hd) @ wo
+    return partial, pool

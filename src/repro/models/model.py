@@ -464,6 +464,162 @@ def init_caches(cfg: ModelConfig, env: AxisEnv, B_loc: int, seq_len: int,
             for i in range(cfg.n_layers)]
 
 
+# ---- paged decode / chunked prefill (online serving) -----------------------
+#
+# The online continuous-batching engine (serving/online.py) replaces the
+# dense (B, seq_len) decode caches with slot-agnostic page pools indexed by
+# per-slot page tables, so request admission/completion/preemption are pure
+# data updates on fixed-shape arrays — the jitted serve step compiles once.
+# Supported for decoder-only all-attention architectures (the Ling family);
+# recurrent-state blocks (rwkv/rglru), sliding windows, and enc-dec carry
+# per-slot state the page abstraction does not cover yet (ROADMAP).
+
+
+def check_paged_support(cfg: ModelConfig):
+    kinds = {cfg.block_kind(i) for i in range(cfg.n_layers)}
+    if kinds != {"attn"} or cfg.is_encoder_decoder:
+        raise ValueError(
+            f"paged online serving supports decoder-only all-'attn' "
+            f"architectures; {cfg.arch_id} has blocks {sorted(kinds)}"
+            f"{' (encoder-decoder)' if cfg.is_encoder_decoder else ''}")
+
+
+def init_paged_caches(cfg: ModelConfig, env: AxisEnv, n_pages: int,
+                      page_size: int):
+    """GLOBAL per-layer paged KV pools (page 0 is the engine's scratch
+    page).  Uniform archs carry a leading layer dim so the decode scan
+    matches `init_caches`; see `api.paged_cache_specs` for sharding."""
+    check_paged_support(cfg)
+    c0 = {"self": L.init_paged_kv_pool(cfg, n_pages, page_size)}
+    if cfg.uniform_blocks:
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), c0)
+    return [jax.tree.map(jnp.array, c0) for _ in range(cfg.n_layers)]
+
+
+def block_decode_paged(cfg, env: AxisEnv, params, x, pool, pos, table,
+                       active, *, page_size: int, ffn: str,
+                       flags: RunFlags = DEFAULT_FLAGS):
+    """Paged analogue of `block_decode` ('attn' blocks only): x (B, d)
+    replicated over tp, pool the layer's page pool."""
+    h = L.apply_norm(cfg, env, params["norm1"], x)
+    partial, pool["self"] = L.paged_decode_attention(
+        cfg, env, params["attn"], h, pool["self"], pos, table, active,
+        page_size=page_size)
+    x = x + env.psum_tp(partial)
+
+    h = L.apply_norm(cfg, env, params["norm2"], x)
+    if ffn == "moe":
+        partial, _, _ = moe_lib.moe_ffn(cfg, env, params["moe"], h,
+                                        train=False,
+                                        dispatch=flags.moe_dispatch)
+        x = x + env.psum_tp(partial)
+    else:
+        x = x + env.psum_tp(L.apply_mlp(cfg, env, params["mlp"], h))
+    return x, pool
+
+
+def paged_decode_step(cfg: ModelConfig, env: AxisEnv, params, pools,
+                      token: jax.Array, pos: jax.Array, table: jax.Array,
+                      active: jax.Array, *, page_size: int,
+                      flags: RunFlags = DEFAULT_FLAGS):
+    """One greedy decode tick over the slot batch.
+
+    token (B,) input token per slot; pos (B,) position being written;
+    table (B, n_lp) page table; active (B,) bool.  Inactive slots compute
+    harmlessly (their writes land in the scratch page, their outputs are
+    ignored by the host).  Returns (next (B,), pools)."""
+    denv = dataclasses.replace(env, seq_parallel=False)
+    x = emb.embed_tokens(cfg, denv, params["embed"], token)   # (B, d)
+    ffn = _ffn_kind(cfg, cfg.n_layers - 1)
+
+    if cfg.uniform_blocks:
+        def body(x, inp):
+            lp, pool = inp
+            x, pool = block_decode_paged(cfg, denv, lp, x, pool, pos,
+                                         table, active,
+                                         page_size=page_size, ffn=ffn,
+                                         flags=flags)
+            return x, pool
+
+        x, pools = jax.lax.scan(body, x, (params["blocks"], pools))
+    else:
+        new_pools = []
+        for i, lp in enumerate(params["blocks"]):
+            x, p = block_decode_paged(cfg, denv, lp, x, pools[i], pos,
+                                      table, active, page_size=page_size,
+                                      ffn=_ffn_kind(cfg, i), flags=flags)
+            new_pools.append(p)
+        pools = new_pools
+    x = L.apply_norm(cfg, denv, params["final_norm"], x)
+    logits = emb.lm_logits(cfg, denv, params["embed"], x)
+    nxt = emb.sharded_argmax(denv, logits)
+    return nxt.astype(jnp.int32), pools
+
+
+def block_prefill_paged(cfg, env: AxisEnv, params, x, pool, base, n_valid,
+                        table_row, *, page_size: int, ffn: str,
+                        flags: RunFlags = DEFAULT_FLAGS):
+    """One layer of chunked prefill for a single request: x (C, d)."""
+    h = L.apply_norm(cfg, env, params["norm1"], x)
+    partial, pool["self"] = L.paged_prefill_attention(
+        cfg, env, params["attn"], h, pool["self"], base, n_valid,
+        table_row, page_size=page_size)
+    x = x + env.psum_tp(partial)
+
+    h = L.apply_norm(cfg, env, params["norm2"], x)
+    if ffn == "moe":
+        partial, _, _ = moe_lib.moe_ffn(cfg, env, params["moe"], h,
+                                        train=False,
+                                        dispatch=flags.moe_dispatch)
+        x = x + env.psum_tp(partial)
+    else:
+        x = x + env.psum_tp(L.apply_mlp(cfg, env, params["mlp"], h))
+    return x, pool
+
+
+def paged_prefill_chunk(cfg: ModelConfig, env: AxisEnv, params, pools,
+                        tokens: jax.Array, base: jax.Array,
+                        n_valid: jax.Array, table_row: jax.Array, *,
+                        page_size: int, flags: RunFlags = DEFAULT_FLAGS):
+    """Prefill one chunk of one request's prompt into its pages.
+
+    tokens (C,) the chunk (tail past n_valid is padding); base (scalar)
+    tokens already written; table_row (n_lp,) the request's page table.
+    Returns (next (scalar int32) — the greedy token after the last valid
+    chunk position, meaningful only on the request's final chunk — and
+    the updated pools)."""
+    denv = dataclasses.replace(env, seq_parallel=False)
+    x = emb.embed_tokens(cfg, denv, params["embed"], tokens)  # (C, d)
+    ffn = _ffn_kind(cfg, cfg.n_layers - 1)
+
+    if cfg.uniform_blocks:
+        def body(x, inp):
+            lp, pool = inp
+            x, pool = block_prefill_paged(cfg, denv, lp, x, pool, base,
+                                          n_valid, table_row,
+                                          page_size=page_size, ffn=ffn,
+                                          flags=flags)
+            return x, pool
+
+        x, pools = jax.lax.scan(body, x, (params["blocks"], pools))
+    else:
+        new_pools = []
+        for i, lp in enumerate(params["blocks"]):
+            x, p = block_prefill_paged(cfg, denv, lp, x, pools[i], base,
+                                       n_valid, table_row,
+                                       page_size=page_size,
+                                       ffn=_ffn_kind(cfg, i), flags=flags)
+            new_pools.append(p)
+        pools = new_pools
+    x = L.apply_norm(cfg, denv, params["final_norm"], x)
+    last = jax.lax.dynamic_slice_in_dim(
+        x, jnp.clip(n_valid - 1, 0, x.shape[0] - 1), 1, axis=0)
+    logits = emb.lm_logits(cfg, denv, params["embed"], last)
+    nxt = emb.sharded_argmax(denv, logits)
+    return nxt[0].astype(jnp.int32), pools
+
+
 def decode_step(cfg: ModelConfig, env: AxisEnv, params, caches,
                 token: jax.Array, pos: jax.Array,
                 flags: RunFlags = DEFAULT_FLAGS):

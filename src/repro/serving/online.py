@@ -1,0 +1,486 @@
+"""Online continuous-batching serving engine over a paged device KV cache.
+
+Flood (serving/flood.py) is the *offline* half of the paper's §2.4 story:
+a fixed request set, dense (B, seq_len) caches, host-side segment
+bookkeeping.  This module is the *online* half the ROADMAP north star
+asks for — requests arrive over time, join a running batch, and stream
+tokens out — built from three pieces:
+
+  * **Fixed-shape jitted serve steps.**  `max_slots` request slots; one
+    paged decode tick over all slots (`api.Runner.make_paged_decode_step`)
+    and one chunked-prefill step for a single request
+    (`api.Runner.make_paged_prefill`).  Slot membership, sequence
+    lengths, and page bindings are *data* (int32/bool arrays of fixed
+    shape), so admitting, finishing, or preempting a request never
+    recompiles — a test drives churn across >= 3x max_slots requests and
+    asserts exactly one prefill + one decode XLA compile.
+
+  * **Paged device KV.**  KV lives in slot-agnostic pools
+    (n_pages, page_size, KV, hd) — the in-page offset dim sharded 1/tp —
+    indexed by per-slot page tables.  `segment_cache.PageAllocator` owns
+    the physical pages: admission, `ensure_capacity` growth, refcounted
+    prefix-page sharing, preempt-and-requeue on exhaustion.
+
+  * **The scheduler.**  An arrival queue with FCFS admission into free
+    slots; each tick runs at most ONE prefill chunk (the oldest admitted
+    request with unprefilled prompt) plus one decode tick for every
+    decode-ready slot, so a long prompt costs the running batch one
+    chunk of latency per tick instead of a full-prompt stall.  On pool
+    exhaustion the youngest admitted request is preempted (pages freed,
+    request requeued at the arrival-queue head) and re-prefills its
+    prompt *plus* its already-emitted tokens on re-admission — emitted
+    tokens are never re-sampled, so preemption is invisible in the
+    output stream.
+
+The per-slot decode batch shares every MoE decode constraint with the
+offline engine: `max_slots` and `prefill_chunk` must satisfy
+`quantize_microbatch(n, tp) == n` (the EP all-to-all path slices token
+ownership over tp), checked at construction.
+
+`run_poisson_load` is the load generator: Poisson arrivals at a given
+rate, per-request TTFT / inter-token latency / throughput percentiles —
+`launch/serve.py --online` reports them into BENCH_serve_online.json.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.serving.flood import quantize_microbatch
+from repro.serving.segment_cache import PageAllocator
+
+
+@dataclasses.dataclass
+class OnlineConfig:
+    """Engine geometry.  `max_context` bounds prompt+generation per
+    request (the page-table width); `n_pages` sizes the shared pool
+    (default: every slot can hold a full context, +1 scratch page —
+    shrink it to exercise preemption)."""
+    max_slots: int
+    max_context: int
+    page_size: int = 16
+    n_pages: Optional[int] = None
+    prefill_chunk: int = 8
+    donate: bool = True
+    eos_id: Optional[int] = None
+
+    @property
+    def max_pages(self) -> int:
+        return -(-self.max_context // self.page_size)
+
+    def pool_pages(self) -> int:
+        if self.n_pages is not None:
+            return self.n_pages
+        return self.max_slots * self.max_pages + 1
+
+
+@dataclasses.dataclass
+class OnlineRequest:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    prefix_key: Optional[str] = None
+    arrival_t: float = 0.0
+    out: List[int] = dataclasses.field(default_factory=list)
+    state: str = "queued"            # queued | prefill | decode | done
+    admit_t: Optional[float] = None
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    n_preempted: int = 0
+    # scheduler scratch (valid while the request holds a slot)
+    fed: Optional[np.ndarray] = None   # tokens to prefill (prompt + out[:-1])
+    prefill_pos: int = 0
+
+    @property
+    def done(self) -> bool:
+        return self.state == "done"
+
+
+class OnlineEngine:
+    """Continuous-batching scheduler around the fixed-shape paged steps.
+
+    `prefill_traces` / `decode_traces` count python re-traces of the
+    jitted steps (== XLA compiles, the `StagedTrainStep` trace-counter
+    pattern); the engine contract is that both stay at 1 across arbitrary
+    admission / completion / preemption churn.
+    """
+
+    def __init__(self, runner, params, cfg: OnlineConfig):
+        M.check_paged_support(runner.cfg)
+        env = runner.env
+        tp = env.tp
+        if env.dp != 1:
+            raise ValueError(f"online serving runs on a (1, tp) mesh; "
+                             f"got dp={env.dp}")
+        if quantize_microbatch(cfg.max_slots, tp) != cfg.max_slots:
+            raise ValueError(
+                f"max_slots={cfg.max_slots} violates the EP decode batch "
+                f"constraint (max_slots % tp == 0 for tp={tp}); round up "
+                f"with serving.flood.quantize_microbatch(max_slots, tp) = "
+                f"{quantize_microbatch(cfg.max_slots, tp)}")
+        if quantize_microbatch(cfg.prefill_chunk, tp) != cfg.prefill_chunk:
+            raise ValueError(
+                f"prefill_chunk={cfg.prefill_chunk} must satisfy "
+                f"chunk % tp == 0 (tp={tp}) — the chunk rides the same "
+                f"MoE dispatch path as the decode batch")
+        if cfg.page_size % tp:
+            raise ValueError(f"page_size={cfg.page_size} must be divisible "
+                             f"by tp={tp} (in-page offset sharding)")
+        n_pages = cfg.pool_pages()
+        if n_pages - 1 < cfg.max_pages:
+            raise ValueError(
+                f"pool of {n_pages} pages (1 reserved) cannot hold even "
+                f"one max_context={cfg.max_context} request "
+                f"({cfg.max_pages} pages)")
+        self.cfg = cfg
+        self.runner = runner
+        self.params = params
+        self.alloc = PageAllocator(n_pages, cfg.page_size)
+        self.pools = runner.init_paged_pools(n_pages, cfg.page_size)
+
+        self.prefill_traces = 0
+        self.decode_traces = 0
+        raw_dec = runner.make_paged_decode_step(cfg.page_size)
+        raw_pre = runner.make_paged_prefill(cfg.page_size)
+
+        def dec_fn(params, pools, tok, pos, table, active):
+            self.decode_traces += 1        # runs at trace time
+            return raw_dec(params, pools, tok, pos, table, active)
+
+        def pre_fn(params, pools, tokens, base, n_valid, table_row):
+            self.prefill_traces += 1       # runs at trace time
+            return raw_pre(params, pools, tokens, base, n_valid, table_row)
+
+        donate = (1,) if cfg.donate else ()
+        self._decode = jax.jit(dec_fn, donate_argnums=donate)
+        self._prefill = jax.jit(pre_fn, donate_argnums=donate)
+
+        # host-side slot state (device copies are cut fresh every call —
+        # same shapes/dtypes, so never a recompile)
+        S = cfg.max_slots
+        self.slot_rid = np.full((S,), -1, np.int64)
+        self.table = np.zeros((S, cfg.max_pages), np.int32)
+        self.lens = np.zeros((S,), np.int32)
+        self.active = np.zeros((S,), bool)
+        self.tok = np.zeros((S,), np.int32)
+        self.slot_seq = np.zeros((S,), np.int64)   # admission counter
+        self._seq = 0
+
+        self.queue: Deque[int] = deque()
+        self.reqs: Dict[int, OnlineRequest] = {}
+        self.admission_log: List[int] = []
+        self.ticks = 0
+        self.n_preemptions = 0
+
+    # -- submission -----------------------------------------------------------
+    def submit(self, req: OnlineRequest):
+        total = len(req.prompt) + req.max_new
+        if total > self.cfg.max_context:
+            raise ValueError(f"request {req.rid}: prompt+max_new={total} "
+                             f"exceeds max_context={self.cfg.max_context}")
+        if req.max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        if len(req.prompt) < 1:
+            raise ValueError("prompt must hold at least one token")
+        old = self.reqs.get(req.rid)
+        if old is not None and not old.done:
+            raise ValueError(f"rid {req.rid} is still in flight "
+                             f"(state={old.state}); rids must be unique "
+                             f"among live requests")
+        self.reqs[req.rid] = req
+        self.queue.append(req.rid)
+
+    def submit_many(self, reqs: Sequence[OnlineRequest]):
+        for r in reqs:
+            self.submit(r)
+
+    def register_prefix(self, rid: int, key: str, n_tokens: int):
+        """Publish a live request's leading full pages for prefix reuse;
+        later submissions carrying `prefix_key=key` skip prefilling the
+        shared tokens (contract: their prompt starts with the same
+        tokens)."""
+        self.alloc.register_prefix(rid, key, n_tokens)
+
+    # -- scheduling helpers ---------------------------------------------------
+    def _free_slots(self) -> List[int]:
+        return [int(s) for s in np.flatnonzero(self.slot_rid < 0)]
+
+    def _busy_slots(self) -> List[int]:
+        return [int(s) for s in np.flatnonzero(self.slot_rid >= 0)]
+
+    def _admit(self, now: float):
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            rid = self.queue.popleft()
+            r = self.reqs[rid]
+            # cap prefix attachment at the request's ORIGINAL prompt:
+            # generated tokens diverge from the publisher's continuation,
+            # and shared pages must never receive this request's writes
+            shared = self.alloc.admit(rid, prefix_key=r.prefix_key,
+                                      prompt_len=len(r.prompt))
+            # re-prefill prompt + already-emitted tokens minus the last,
+            # which becomes the next decode input (never re-sampled)
+            r.fed = (np.concatenate([r.prompt,
+                                     np.asarray(r.out[:-1], np.int32)])
+                     if r.out else np.asarray(r.prompt, np.int32)
+                     ).astype(np.int32)
+            r.prefill_pos = min(shared, max(len(r.fed) - 1, 0))
+            r.state = "prefill"
+            r.admit_t = now
+            self.slot_rid[slot] = rid
+            self.slot_seq[slot] = self._seq
+            self._seq += 1
+            self.table[slot] = self.alloc.table_row(rid, self.cfg.max_pages)
+            self.lens[slot] = 0
+            self.active[slot] = False
+            self.tok[slot] = 0
+            self.admission_log.append(rid)
+
+    def _clear_slot(self, slot: int):
+        self.slot_rid[slot] = -1
+        self.table[slot] = 0
+        self.lens[slot] = 0
+        self.active[slot] = False
+        self.tok[slot] = 0
+
+    def _finish(self, slot: int, now: float):
+        rid = int(self.slot_rid[slot])
+        r = self.reqs[rid]
+        self.alloc.release(rid)
+        r.state = "done"
+        r.finish_t = now
+        r.fed = None
+        self._clear_slot(slot)
+
+    def _preempt_slot(self, slot: int):
+        """Free a victim's pages and requeue it at the queue head (FCFS
+        re-admission: when several are preempted youngest-first, each
+        appendleft puts the older one ahead)."""
+        rid = int(self.slot_rid[slot])
+        r = self.reqs[rid]
+        self.alloc.preempt(rid)
+        r.state = "queued"
+        r.n_preempted += 1
+        r.fed = None
+        self.queue.appendleft(rid)
+        self._clear_slot(slot)
+        self.n_preemptions += 1
+
+    def _make_room(self, rid: int, n_tokens: int):
+        """ensure_capacity with preempt-and-requeue: evict the youngest
+        other resident until the grow fits.  Failing with no victims left
+        means this request is the sole resident and STILL cannot fit —
+        nothing will ever free (only pinned prefix pages and its own
+        remain), so raise instead of letting the scheduler thrash through
+        endless self-preemption."""
+        while not self.alloc.ensure_capacity(rid, n_tokens):
+            victims = [s for s in self._busy_slots()
+                       if int(self.slot_rid[s]) != rid]
+            if not victims:
+                pinned = sum(len(p) for p in
+                             self.alloc.prefix_index.values())
+                raise RuntimeError(
+                    f"request {rid} needs {n_tokens} tokens "
+                    f"({-(-n_tokens // self.cfg.page_size)} pages) but the "
+                    f"pool cannot satisfy it even empty: {self.alloc.n_free}"
+                    f" free, {pinned} page refs pinned by registered "
+                    f"prefixes (drop_prefix to release)")
+            self._preempt_slot(max(victims, key=lambda s: self.slot_seq[s]))
+
+    # -- prefill --------------------------------------------------------------
+    def _prefill_target(self) -> Optional[int]:
+        """Oldest admitted slot with unprefilled tokens."""
+        cands = [s for s in self._busy_slots()
+                 if self.reqs[int(self.slot_rid[s])].state == "prefill"]
+        if not cands:
+            return None
+        return min(cands, key=lambda s: self.slot_seq[s])
+
+    def _prefill_tick(self, now: float):
+        slot = self._prefill_target()
+        if slot is None:
+            return
+        rid = int(self.slot_rid[slot])
+        r = self.reqs[rid]
+        C = self.cfg.prefill_chunk
+        n_valid = min(C, len(r.fed) - r.prefill_pos)
+        self._make_room(rid, r.prefill_pos + n_valid)
+        self.table[slot] = self.alloc.table_row(rid, self.cfg.max_pages)
+        chunk = np.zeros((C,), np.int32)
+        chunk[:n_valid] = r.fed[r.prefill_pos:r.prefill_pos + n_valid]
+        nxt, self.pools = self._prefill(
+            self.params, self.pools, jnp.asarray(chunk),
+            jnp.int32(r.prefill_pos), jnp.int32(n_valid),
+            jnp.asarray(self.table[slot]))
+        r.prefill_pos += n_valid
+        if r.prefill_pos < len(r.fed):
+            return                      # more chunks to go
+        # prompt (+ replayed tokens) fully written: enter decode state
+        t = time.perf_counter()
+        self.lens[slot] = len(r.fed)
+        self.active[slot] = True
+        r.state = "decode"
+        if not r.out:
+            tok = int(jax.device_get(nxt))
+            r.out.append(tok)
+            r.first_token_t = t
+            r.token_times.append(t)
+            if len(r.out) >= r.max_new or tok == self.cfg.eos_id:
+                self._finish(slot, t)
+                return
+        self.tok[slot] = r.out[-1]
+
+    # -- decode ---------------------------------------------------------------
+    def _decode_tick(self, now: float):
+        # grow every decode slot to hold its next position, oldest first
+        # (the youngest is the preferred preemption victim, so growing in
+        # age order never evicts a slot we already grew this tick)
+        for slot in sorted(np.flatnonzero(self.active),
+                           key=lambda s: self.slot_seq[s]):
+            slot = int(slot)
+            if not self.active[slot]:
+                continue                # preempted by an earlier grow
+            rid = int(self.slot_rid[slot])
+            self._make_room(rid, int(self.lens[slot]) + 1)
+            self.table[slot] = self.alloc.table_row(rid, self.cfg.max_pages)
+        if not self.active.any():
+            return
+        nxt, self.pools = self._decode(
+            self.params, self.pools, jnp.asarray(self.tok),
+            jnp.asarray(self.lens), jnp.asarray(self.table),
+            jnp.asarray(self.active))
+        nxt = np.asarray(jax.device_get(nxt))
+        t = time.perf_counter()
+        for slot in np.flatnonzero(self.active):
+            slot = int(slot)
+            rid = int(self.slot_rid[slot])
+            r = self.reqs[rid]
+            tok = int(nxt[slot])
+            r.out.append(tok)
+            r.token_times.append(t)
+            self.lens[slot] += 1
+            self.tok[slot] = tok
+            if len(r.out) >= r.max_new or tok == self.cfg.eos_id:
+                self._finish(slot, t)
+
+    def pop_done(self) -> List[OnlineRequest]:
+        """Remove and return finished requests.  The engine retains
+        completed `OnlineRequest` objects (token streams + latency
+        timestamps) until the caller collects them — a long-lived server
+        loop must call this periodically or host memory grows with every
+        request ever served."""
+        done = [r for r in self.reqs.values() if r.done]
+        for r in done:
+            del self.reqs[r.rid]
+        return done
+
+    # -- driver ---------------------------------------------------------------
+    @property
+    def idle(self) -> bool:
+        return not self.queue and not self._busy_slots()
+
+    def tick(self, now: Optional[float] = None):
+        """One engine step: admission -> one prefill chunk -> one decode
+        tick over the slot batch."""
+        now = time.perf_counter() if now is None else now
+        self.ticks += 1
+        self._admit(now)
+        self._prefill_tick(now)
+        self._decode_tick(now)
+
+    def run(self, max_ticks: int = 100_000):
+        """Drive ticks until every submitted request is done."""
+        for _ in range(max_ticks):
+            if self.idle:
+                return
+            self.tick()
+        raise RuntimeError(f"engine did not drain in {max_ticks} ticks "
+                           f"(queue={len(self.queue)}, "
+                           f"busy={self._busy_slots()})")
+
+
+# ---------------------------------------------------------------------------
+# Poisson load generator
+# ---------------------------------------------------------------------------
+
+
+def _pctl(xs: Sequence[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+
+
+def run_poisson_load(engine: OnlineEngine, *, rate: float, n_requests: int,
+                     prompt_len: int, max_new: int, vocab_size: int,
+                     seed: int = 0, max_ticks: int = 1_000_000
+                     ) -> Dict[str, Any]:
+    """Open-loop Poisson arrivals at `rate` req/s against a live engine.
+
+    Requests are submitted when their scheduled arrival time passes on
+    the wall clock (the engine keeps ticking in between — arrivals join
+    the running batch), so TTFT includes genuine queueing delay.
+    Returns TTFT p50/p99, pooled inter-token latency p50/p99, sustained
+    tok/s, and churn counters.
+    """
+    rs = np.random.RandomState(seed)
+    gaps = rs.exponential(1.0 / rate, size=n_requests)
+    arrivals = np.cumsum(gaps)
+    prompts = [rs.randint(0, vocab_size, prompt_len).astype(np.int32)
+               for _ in range(n_requests)]
+    base = (max(engine.reqs) + 1) if engine.reqs else 0   # engine reuse
+    ticks0, preempts0 = engine.ticks, engine.n_preemptions
+    t0 = time.perf_counter()
+    submitted = 0
+    budget = max_ticks
+    while submitted < n_requests or not engine.idle:
+        budget -= 1
+        if budget < 0:
+            raise RuntimeError(f"load run did not drain in {max_ticks} "
+                               f"ticks ({submitted}/{n_requests} submitted)")
+        now = time.perf_counter()
+        while (submitted < n_requests
+               and arrivals[submitted] <= now - t0):
+            r = OnlineRequest(rid=base + submitted,
+                              prompt=prompts[submitted], max_new=max_new,
+                              arrival_t=t0 + arrivals[submitted])
+            engine.submit(r)
+            submitted += 1
+        if engine.idle and submitted < n_requests:
+            time.sleep(min(arrivals[submitted] - (now - t0), 0.01))
+            continue
+        engine.tick(now)
+    t_end = time.perf_counter()
+
+    reqs = [engine.reqs[base + i] for i in range(n_requests)]
+    assert all(r.done for r in reqs)
+    engine.pop_done()              # keep the engine bounded across loads
+    ttft = [r.first_token_t - r.arrival_t for r in reqs]
+    itl: List[float] = []
+    for r in reqs:
+        itl.extend(b - a for a, b in zip(r.token_times, r.token_times[1:]))
+    n_tokens = sum(len(r.out) for r in reqs)
+    return {
+        "rate_req_s": rate,
+        "n_requests": n_requests,
+        "prompt_len": prompt_len,
+        "max_new": max_new,
+        "wall_s": t_end - t0,
+        "tokens_out": n_tokens,
+        "tok_s": n_tokens / max(t_end - t0, 1e-9),
+        "ttft_p50_ms": 1e3 * _pctl(ttft, 50),
+        "ttft_p99_ms": 1e3 * _pctl(ttft, 99),
+        "itl_p50_ms": 1e3 * _pctl(itl, 50),
+        "itl_p99_ms": 1e3 * _pctl(itl, 99),
+        "ticks": engine.ticks - ticks0,
+        "preemptions": engine.n_preemptions - preempts0,
+        "prefill_compiles": engine.prefill_traces,
+        "decode_compiles": engine.decode_traces,
+        "allocator": dict(engine.alloc.stats),
+    }

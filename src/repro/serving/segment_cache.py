@@ -23,6 +23,8 @@ import dataclasses
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple
 
+import numpy as np
+
 
 @dataclasses.dataclass
 class Segment:
@@ -179,6 +181,15 @@ class SegmentCache:
         req.used += 1
         return slot
 
+    # -- preemption ----------------------------------------------------------
+    def preempt(self, rid: int) -> List[int]:
+        """Evict a live request mid-generation (pool pressure): frees its
+        ranges exactly like `release` (refcount-aware, waiters revived);
+        the caller owns re-admission — `admit` the same rid again later
+        and re-prefill.  Returns the revived waiter rids."""
+        self.stats["preempts"] = self.stats.get("preempts", 0) + 1
+        return self.release(rid)
+
     # -- release -------------------------------------------------------------
     def release(self, rid: int) -> List[int]:
         """Free a finished request; returns rids revived from the wait
@@ -223,3 +234,173 @@ class SegmentCache:
         # free list coalesced
         for (s1, l1), (s2, _) in zip(self.free, self.free[1:]):
             assert s1 + l1 < s2, "free list not coalesced"
+
+
+# ---------------------------------------------------------------------------
+# Page-table allocator — the online engine's memory manager
+# ---------------------------------------------------------------------------
+#
+# `SegmentCache` above is Flood's host-side bookkeeping over one contiguous
+# token arena: segments are variable-length ranges and the device cache
+# stays a dense tensor the host indexes into.  The *online* engine
+# (serving/online.py) instead stores KV on device as a pool of fixed-size
+# pages indexed by per-slot page tables, so this allocator is the
+# page-granular refactor of the same responsibilities: admission,
+# `ensure_capacity` growth, prefix-cache sharing (refcounted *pages*
+# instead of refcounted segments), and preempt-and-requeue when the pool
+# runs dry.  Fixed-size pages trade SegmentCache's large contiguous
+# blocks for O(1) allocation and zero external fragmentation — the trade
+# vLLM made, and the right one once the device side gathers pages anyway.
+
+
+class PageAllocator:
+    """Host-side physical-page allocator for the paged device KV pools.
+
+    Page 0 is reserved as the device scratch page (masked lanes write
+    there) and is never handed out; page ids in tables are therefore
+    always >= 1 for allocated logical pages and 0 for "unallocated".
+    Free pages are recycled LIFO from a deterministic stack so identical
+    op sequences produce identical page tables (the compile-count and
+    parity tests rely on this).
+    """
+
+    def __init__(self, n_pages: int, page_size: int, reserved: int = 1):
+        if n_pages <= reserved:
+            raise ValueError(f"n_pages={n_pages} <= reserved={reserved}")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.reserved = reserved
+        self.free_list: List[int] = list(range(n_pages - 1, reserved - 1,
+                                               -1))   # pop() -> lowest id
+        self.refcount: Dict[int, int] = {}
+        self.pages: Dict[int, List[int]] = {}         # rid -> logical order
+        self.shared_len: Dict[int, int] = {}          # rid -> prefix tokens
+        self.prefix_index: Dict[str, List[int]] = {}
+        self.stats = {"allocs": 0, "frees": 0, "prefix_hits": 0,
+                      "preempts": 0, "alloc_failures": 0}
+
+    # -- queries --------------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self.free_list)
+
+    def capacity(self, rid: int) -> int:
+        """Tokens the request's current pages can hold."""
+        return len(self.pages[rid]) * self.page_size
+
+    def table_row(self, rid: int, width: int):
+        """The request's page table padded to `width` logical pages with
+        the 0 sentinel (ready to land in the device table)."""
+        row = np.zeros((width,), np.int32)
+        pages = self.pages[rid]
+        if len(pages) > width:
+            raise ValueError(f"request {rid} holds {len(pages)} pages > "
+                             f"table width {width}")
+        row[:len(pages)] = pages
+        return row
+
+    # -- admission ------------------------------------------------------------
+    def admit(self, rid: int, prefix_key: Optional[str] = None,
+              prompt_len: Optional[int] = None) -> int:
+        """Bind a request; attach refcounted prefix pages on a hit.
+        `prompt_len` caps the attachment to pages the request's OWN
+        prompt fully covers — a consumer whose prompt is shorter than
+        the published prefix must not attach (and later decode-write
+        into) shared pages beyond it.  Returns the number of prompt
+        tokens already covered (0 on a miss) — the engine starts
+        prefilling there."""
+        assert rid not in self.pages, f"rid {rid} already admitted"
+        self.pages[rid] = []
+        self.shared_len[rid] = 0
+        if prefix_key and prefix_key in self.prefix_index:
+            shared = self.prefix_index[prefix_key]
+            if prompt_len is not None:
+                shared = shared[:prompt_len // self.page_size]
+            for p in shared:
+                self.refcount[p] += 1
+            self.pages[rid] = list(shared)
+            self.shared_len[rid] = len(shared) * self.page_size
+            self.stats["prefix_hits"] += 1
+        return self.shared_len[rid]
+
+    def register_prefix(self, rid: int, key: str, n_tokens: int):
+        """Publish the request's leading full pages as a shared prefix.
+        Only complete pages are shared (a partial page would need
+        copy-on-write for the writes that follow it).  Re-registering a
+        key first releases the old entry's refcounts."""
+        if key in self.prefix_index:
+            self.drop_prefix(key)
+        full = n_tokens // self.page_size
+        shared = self.pages[rid][:full]
+        for p in shared:
+            self.refcount[p] += 1
+        self.prefix_index[key] = shared
+
+    # -- growth ---------------------------------------------------------------
+    def ensure_capacity(self, rid: int, n_tokens: int) -> bool:
+        """Grow the request to hold n_tokens; all-or-nothing so a failed
+        grow never strands half an allocation.  False = pool exhausted
+        (caller preempts a victim and retries, or parks the request)."""
+        need = -(-n_tokens // self.page_size) - len(self.pages[rid])
+        if need <= 0:
+            return True
+        if need > len(self.free_list):
+            self.stats["alloc_failures"] += 1
+            return False
+        for _ in range(need):
+            p = self.free_list.pop()
+            self.refcount[p] = 1
+            self.pages[rid].append(p)
+            self.stats["allocs"] += 1
+        return True
+
+    # -- release / preemption -------------------------------------------------
+    def release(self, rid: int):
+        """Free a finished request's pages (shared prefix pages survive
+        while other holders — or the prefix index — still reference
+        them)."""
+        for p in self.pages.pop(rid):
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0:
+                del self.refcount[p]
+                self.free_list.append(p)
+                self.stats["frees"] += 1
+        del self.shared_len[rid]
+
+    def preempt(self, rid: int):
+        """Pool-pressure eviction: identical to release at the allocator
+        level; the engine requeues the request for deterministic FCFS
+        re-admission and re-prefills on its next turn."""
+        self.stats["preempts"] += 1
+        self.release(rid)
+
+    def drop_prefix(self, key: str):
+        """Unpublish a shared prefix (its pages free once no request
+        still holds them)."""
+        for p in self.prefix_index.pop(key):
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0:
+                del self.refcount[p]
+                self.free_list.append(p)
+                self.stats["frees"] += 1
+
+    # -- invariants -----------------------------------------------------------
+    def check_invariants(self):
+        refs: Dict[int, int] = {}
+        for pages in self.pages.values():
+            for p in pages:
+                refs[p] = refs.get(p, 0) + 1
+        for pages in self.prefix_index.values():
+            for p in pages:
+                refs[p] = refs.get(p, 0) + 1
+        assert refs == self.refcount, (refs, self.refcount)
+        live = set(refs)
+        free = set(self.free_list)
+        assert len(free) == len(self.free_list), "free list has dupes"
+        assert not (live & free), f"live∩free: {live & free}"
+        assert not any(p < self.reserved for p in live | free), \
+            "reserved page leaked into circulation"
+        assert live | free == set(range(self.reserved, self.n_pages)), \
+            "pages leaked"
+        for pages in self.pages.values():
+            assert len(set(pages)) == len(pages), "duplicate page in table"

@@ -98,7 +98,7 @@ class Trainer:
                 spike_guard=cfg.spike, donate=cfg.donate)
         self.params = runner.init_params(cfg.seed)
         self.opt_state = adamw.init_opt_state(self.params)
-        self.guard_state = spikes_lib.init_guard_state()
+        self.guard_state = spikes_lib.init_guard_state(cfg.spike)
         self.rng = jax.random.PRNGKey(cfg.seed)
         self.step = 0                  # next step index to execute
         self.history: List[Dict[str, float]] = []

@@ -1,10 +1,12 @@
 """Segment KV cache: unit tests + hypothesis property tests on the
-allocator invariants (no overlap, coalesced free list, waiter progress)."""
+allocator invariants (no overlap, coalesced free list, waiter progress),
+a randomized admit/extend/release/preempt churn stress, and the
+page-granular `PageAllocator` the online serving engine uses."""
 import numpy as np
 import pytest
 from util import given, settings, st   # hypothesis, or a skip shim
 
-from repro.serving.segment_cache import SegmentCache
+from repro.serving.segment_cache import PageAllocator, SegmentCache
 
 
 def test_admit_and_write():
@@ -73,6 +75,70 @@ def test_prefix_caching_shares_segments():
     c.check_invariants()
 
 
+def _churn(seed: int, n_ops: int = 400, max_tokens: int = 256):
+    """One deterministic admit/extend/release/preempt churn run.  Returns
+    (cache, admission order, revived-waiter log) for cross-run
+    comparison."""
+    rs = np.random.RandomState(seed)
+    c = SegmentCache(max_tokens=max_tokens, initial_segment=16,
+                     extend_chunk=16)
+    live, admitted, revived_log = [], [], []
+    next_rid = 0
+    for _ in range(n_ops):
+        op = rs.randint(4)
+        if op == 0:                                   # admit
+            next_rid += 1
+            if c.admit(next_rid, prompt_len=int(rs.randint(1, 16)),
+                       max_new=int(rs.randint(1, 64))):
+                live.append(next_rid)
+                admitted.append(next_rid)
+        elif op == 1 and live:                        # extend (write run)
+            rid = live[rs.randint(len(live))]
+            for _ in range(int(rs.randint(1, 24))):
+                if c.write_token(rid) is None:
+                    break
+        elif op == 2 and live:                        # release
+            rid = live.pop(rs.randint(len(live)))
+            revived_log.append(tuple(c.release(rid)))
+        elif op == 3 and live:                        # preempt
+            rid = live.pop(rs.randint(len(live)))
+            revived_log.append(tuple(c.preempt(rid)))
+        c.check_invariants()
+    for rid in list(live):
+        c.release(rid)
+    c.check_invariants()
+    return c, admitted, revived_log
+
+
+def test_churn_stress_admit_extend_release_preempt():
+    """Randomized churn (incl. the new preempt path) never violates the
+    allocator invariants, leaks no ranges, and replays identically —
+    admissions AND the order waiters are revived in are deterministic."""
+    for seed in (0, 1, 2):
+        c, admitted, revived = _churn(seed)
+        assert sum(l for _, l in c.free) == c.max_tokens   # nothing leaked
+        assert not c.requests
+        assert c.stats["preempts"] >= 1, "churn never preempted"
+        c2, admitted2, revived2 = _churn(seed)
+        assert admitted2 == admitted
+        assert revived2 == revived
+
+
+def test_preempt_frees_and_allows_readmission():
+    c = SegmentCache(max_tokens=96, initial_segment=32, extend_chunk=32)
+    assert c.admit(1, 8, 100)
+    assert c.admit(2, 8, 100)
+    for _ in range(20):
+        assert c.write_token(1) is not None
+    c.preempt(1)
+    assert 1 not in c.requests
+    assert c.stats["preempts"] == 1
+    c.check_invariants()
+    assert c.admit(1, 8, 100)          # deterministic re-admission works
+    assert c.write_token(1) is not None
+    c.check_invariants()
+
+
 @settings(max_examples=60, deadline=None)
 @given(st.lists(st.tuples(st.integers(0, 2), st.integers(1, 40)),
                 min_size=1, max_size=60),
@@ -103,3 +169,112 @@ def test_allocator_invariants(ops, max_tokens):
         c.release(r)
     c.check_invariants()
     assert sum(l for _, l in c.free) == max_tokens   # all memory returned
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator (online serving)
+# ---------------------------------------------------------------------------
+
+
+def test_page_allocator_admit_grow_release():
+    a = PageAllocator(n_pages=9, page_size=8)
+    assert a.admit(1) == 0
+    assert a.ensure_capacity(1, 20)           # 3 pages
+    assert a.capacity(1) == 24
+    assert a.n_free == 5
+    row = a.table_row(1, width=6)
+    assert list(row[:3]) == a.pages[1] and not row[3:].any()
+    assert 0 not in a.pages[1]                # scratch page never allocated
+    a.check_invariants()
+    a.release(1)
+    assert a.n_free == 8
+    a.check_invariants()
+
+
+def test_page_allocator_all_or_nothing_and_preempt():
+    a = PageAllocator(n_pages=5, page_size=8)   # 4 usable pages
+    a.admit(1)
+    a.admit(2)
+    assert a.ensure_capacity(1, 24)             # 3 pages
+    before = list(a.pages[2])
+    assert not a.ensure_capacity(2, 24)         # needs 3, only 1 free
+    assert a.pages[2] == before                 # failed grow allocated nothing
+    assert a.stats["alloc_failures"] == 1
+    a.preempt(1)
+    assert a.stats["preempts"] == 1
+    assert a.ensure_capacity(2, 24)             # victim's pages recycled
+    a.check_invariants()
+
+
+def test_page_allocator_prefix_sharing_refcounts():
+    a = PageAllocator(n_pages=12, page_size=8)
+    a.admit(1)
+    a.ensure_capacity(1, 20)                    # 2 full pages + 1 partial
+    a.register_prefix(1, "sys", 16)             # only FULL pages shared
+    assert len(a.prefix_index["sys"]) == 2
+    shared = a.admit(2, prefix_key="sys")
+    assert shared == 16
+    assert a.pages[2][:2] == a.pages[1][:2]
+    assert a.stats["prefix_hits"] == 1
+    a.ensure_capacity(2, 24)                    # private growth page
+    assert a.pages[2][2] != a.pages[1][2]
+    a.check_invariants()
+    a.release(1)                                # shared pages stay (index+2)
+    a.check_invariants()
+    a.release(2)
+    held = len(a.prefix_index["sys"])
+    assert a.n_free == a.n_pages - a.reserved - held
+    a.drop_prefix("sys")
+    assert a.n_free == a.n_pages - a.reserved
+    a.check_invariants()
+
+
+def test_page_allocator_deterministic_recycling():
+    """Identical op sequences hand out identical page ids (the engine's
+    parity and compile-count tests rely on this)."""
+    def run():
+        a = PageAllocator(n_pages=8, page_size=4)
+        ids = []
+        a.admit(1); a.ensure_capacity(1, 10)
+        a.admit(2); a.ensure_capacity(2, 6)
+        ids.append(list(a.pages[1]) + list(a.pages[2]))
+        a.preempt(1)
+        a.admit(3); a.ensure_capacity(3, 12)
+        ids.append(list(a.pages[3]))
+        return ids
+    assert run() == run()
+
+
+def test_page_allocator_prefix_clamped_to_consumer_prompt():
+    """A consumer whose prompt is shorter than the published prefix must
+    not attach shared pages beyond its own prompt — its decode would
+    write new-token KV straight into pages other requests attend."""
+    a = PageAllocator(n_pages=12, page_size=8)
+    a.admit(1)
+    a.ensure_capacity(1, 24)
+    a.register_prefix(1, "sys", 24)             # 3 full pages published
+    shared = a.admit(2, prefix_key="sys", prompt_len=16)
+    assert shared == 16                          # clamped, not 24
+    assert len(a.pages[2]) == 2
+    assert a.pages[2] == a.pages[1][:2]
+    a.check_invariants()
+
+
+def test_page_allocator_reregister_prefix_releases_old():
+    """Re-registering a key must drop the old entry's refcounts — the
+    old pages return to the pool instead of leaking forever."""
+    a = PageAllocator(n_pages=12, page_size=8)
+    a.admit(1)
+    a.ensure_capacity(1, 16)
+    a.register_prefix(1, "sys", 16)
+    a.admit(2)
+    a.ensure_capacity(2, 16)
+    a.register_prefix(2, "sys", 16)             # replaces the entry
+    a.check_invariants()
+    a.release(1)
+    a.release(2)
+    held = len(a.prefix_index["sys"])
+    assert a.n_free == a.n_pages - a.reserved - held
+    a.drop_prefix("sys")
+    assert a.n_free == a.n_pages - a.reserved   # nothing leaked
+    a.check_invariants()

@@ -125,6 +125,90 @@ def test_engine_step_discards_spike_on_device():
 
 
 # ---------------------------------------------------------------------------
+# grad-norm-keyed guard (§3.4.4 fn2)
+# ---------------------------------------------------------------------------
+
+
+def test_guard_gnorm_vetoes_commit():
+    """With gnorm_sigma_threshold set the guard carries a second EMA and
+    vetoes the commit on a grad-norm spike even when the loss is calm;
+    rejected steps pollute neither statistic."""
+    cfg = SpikeConfig(warmup_steps=0, gnorm_sigma_threshold=4.0)
+    state = spikes_lib.init_guard_state(cfg)
+    assert "gmean" in state and "gvar" in state
+    for i, (l, g) in enumerate([(4.0, 1.0), (4.1, 1.1), (3.9, 0.9)]):
+        commit, state = spikes_lib.guard_commit(cfg, state, jnp.float32(l),
+                                                gnorm=jnp.float32(g))
+        assert bool(commit), i
+    mean_before = float(state["gmean"])
+    # calm loss, exploding grad norm -> skip
+    commit, state = spikes_lib.guard_commit(cfg, state, jnp.float32(4.0),
+                                            gnorm=jnp.float32(50.0))
+    assert not bool(commit)
+    assert float(state["gmean"]) == pytest.approx(mean_before)
+    # non-finite grad norm -> skip even though the loss is finite
+    commit, state = spikes_lib.guard_commit(cfg, state, jnp.float32(4.0),
+                                            gnorm=jnp.float32(np.nan))
+    assert not bool(commit)
+    # back to normal -> commit resumes
+    commit, state = spikes_lib.guard_commit(cfg, state, jnp.float32(4.0),
+                                            gnorm=jnp.float32(1.0))
+    assert bool(commit)
+
+
+def test_guard_gnorm_off_keeps_legacy_state_and_decisions():
+    """Default config: 4-leaf state, and passing gnorm changes nothing
+    (existing checkpoints and the loss-only parity tests stay valid)."""
+    cfg = SpikeConfig(warmup_steps=3)
+    assert set(spikes_lib.init_guard_state(cfg)) == {"mean", "var", "n",
+                                                     "seeded"}
+    s_a = spikes_lib.init_guard_state()
+    s_b = spikes_lib.init_guard_state(cfg)
+    for l in [4.0, 4.1, 3.9, 8.0, 4.0]:
+        ca, s_a = spikes_lib.guard_commit(cfg, s_a, jnp.float32(l))
+        cb, s_b = spikes_lib.guard_commit(cfg, s_b, jnp.float32(l),
+                                          gnorm=jnp.float32(1e9))
+        assert bool(ca) == bool(cb)
+    for k in s_a:
+        assert float(s_a[k]) == float(s_b[k]), k
+
+
+def test_engine_step_discards_gnorm_spike_on_device():
+    """End-to-end: a guard state whose grad-norm EMA says 'spike' leaves
+    params/opt untouched even though the loss statistic is calm."""
+    runner = _runner()
+    B, S = 2, 32
+    cfg = SpikeConfig(gnorm_sigma_threshold=4.0)
+    step = runner.jit_train_step(B, spike_guard=cfg, donate=False)
+    params = runner.init_params(0)
+    opt = adamw.init_opt_state(params)
+    rs = np.random.RandomState(0)
+    batch = {"tokens": jnp.asarray(rs.randint(0, runner.cfg.vocab_size,
+                                              (B, S)), jnp.int32),
+             "labels": jnp.asarray(rs.randint(0, runner.cfg.vocab_size,
+                                              (B, S)), jnp.int32)}
+    # loss EMA sits far ABOVE the real loss (no loss spike possible) while
+    # the gnorm EMA sits far below the real grad norm -> certain veto
+    guard = {"mean": jnp.float32(100.0), "var": jnp.float32(1.0),
+             "n": jnp.int32(1000), "seeded": jnp.int32(1),
+             "gmean": jnp.float32(1e-6), "gvar": jnp.float32(1e-12)}
+    p2, o2, g2, m = step(params, opt, guard, batch, jnp.int32(0),
+                         jax.random.PRNGKey(0), jnp.float32(1e-3))
+    assert float(m["commit"]) == 0.0
+    assert int(o2["count"]) == 0
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(g2["gmean"]) == pytest.approx(1e-6)
+    # a fresh (unseeded) guard on the same batch commits normally
+    p3, o3, g3, m3 = step(params, opt, spikes_lib.init_guard_state(cfg),
+                          batch, jnp.int32(0), jax.random.PRNGKey(0),
+                          jnp.float32(1e-3))
+    assert float(m3["commit"]) == 1.0
+    assert float(g3["gmean"]) == pytest.approx(float(m3["grad_norm"]),
+                                               rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
 # grad accumulation parity
 # ---------------------------------------------------------------------------
 
