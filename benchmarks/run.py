@@ -32,9 +32,9 @@ import time
 
 BENCHES = [
     "fig4_xputimer", "fig8_edit", "table2_pcache", "babel_metadata",
-    "babel_crc", "table3_flood", "serve_online", "dpo_packing",
-    "table1_hetero", "fig12_13_scaling", "fig14_spikes", "fig18_eval",
-    "kernels", "train_step", "roofline",
+    "babel_crc", "table3_flood", "serve_online", "spec_decode",
+    "dpo_packing", "table1_hetero", "fig12_13_scaling", "fig14_spikes",
+    "fig18_eval", "kernels", "train_step", "roofline",
 ]
 
 

@@ -317,7 +317,13 @@ class Runner:
         return _shard_map(fn, self.mesh, in_specs, out_specs)
 
     # -- decode -----------------------------------------------------------------
-    def make_decode_step(self, global_batch: int, seq_len: int):
+    def make_decode_step(self, global_batch: int, seq_len: int,
+                         sample: bool = False):
+        """Dense fixed-batch decode step.  With ``sample=True`` it takes
+        four extra per-sequence arrays ``(seeds, temperature, top_p,
+        top_k)`` and draws under the same (seed, pos, stream) key
+        schedule as the online paged path (offline/online stream parity
+        for matching seeds; bitwise greedy at temperature <= 0)."""
         cfg, env, flags = self.cfg, self.env, self.flags
         b = batch_sharding(env, global_batch)
         B_loc = (global_batch // env.dp if b is not None else global_batch)
@@ -326,11 +332,20 @@ class Runner:
                                   cross_len=cfg.encoder_seq_len))
         cache_specs = cache_partition_specs(cfg, env, caches, b)
 
-        def fn(params, caches, token, pos):
-            return M.decode_step(cfg, env, params, caches, token, pos,
-                                 flags=flags)
+        if sample:
+            def fn(params, caches, token, pos, seeds, temp, top_p, top_k):
+                return M.decode_step(cfg, env, params, caches, token, pos,
+                                     flags=flags,
+                                     sample=(seeds, temp, top_p, top_k))
 
-        in_specs = (self.specs, cache_specs, P(b), P())
+            in_specs = (self.specs, cache_specs, P(b), P(),
+                        P(b), P(b), P(b), P(b))
+        else:
+            def fn(params, caches, token, pos):
+                return M.decode_step(cfg, env, params, caches, token, pos,
+                                     flags=flags)
+
+            in_specs = (self.specs, cache_specs, P(b), P())
         out_specs = (P(b), cache_specs)
         return _shard_map(fn, self.mesh, in_specs, out_specs), cache_specs
 
@@ -353,41 +368,113 @@ class Runner:
                                         page_size),
             out_shardings=shardings)()
 
-    def make_paged_decode_step(self, page_size: int):
+    def make_paged_decode_step(self, page_size: int, sample: bool = False):
         """Fixed-shape paged decode tick over the slot batch:
         ``(params, pools, token (B,), pos (B,), table (B, n_lp),
         active (B,)) -> (next (B,), pools)``.  B (= max_slots) and the
         table width are fixed by the arrays the caller jits with; slot
         membership lives entirely in the data (table/active), so the
         online engine admits, finishes, and preempts requests without
-        ever recompiling."""
+        ever recompiling.
+
+        With ``sample=True`` the step takes four extra per-slot arrays
+        ``(seeds (B,), temperature (B,), top_p (B,), top_k (B,))`` and
+        draws under the (seed, pos, stream) key schedule; slots with
+        temperature <= 0 still emit the bitwise greedy token, so one
+        compiled step serves mixed greedy/stochastic batches."""
         cfg, env, flags = self.cfg, self.env, self.flags
         pspecs = paged_cache_specs(cfg, env)
 
-        def fn(params, pools, token, pos, table, active):
-            return M.paged_decode_step(cfg, env, params, pools, token, pos,
-                                       table, active, page_size=page_size,
-                                       flags=flags)
+        if sample:
+            def fn(params, pools, token, pos, table, active, seeds, temp,
+                   top_p, top_k):
+                return M.paged_decode_step(
+                    cfg, env, params, pools, token, pos, table, active,
+                    page_size=page_size, flags=flags,
+                    sample=(seeds, temp, top_p, top_k))
 
-        in_specs = (self.specs, pspecs, P(), P(), P(), P())
+            in_specs = (self.specs, pspecs) + (P(),) * 8
+        else:
+            def fn(params, pools, token, pos, table, active):
+                return M.paged_decode_step(cfg, env, params, pools, token,
+                                           pos, table, active,
+                                           page_size=page_size, flags=flags)
+
+            in_specs = (self.specs, pspecs, P(), P(), P(), P())
         out_specs = (P(), pspecs)
         return _shard_map(fn, self.mesh, in_specs, out_specs)
 
-    def make_paged_prefill(self, page_size: int):
+    def make_paged_prefill(self, page_size: int, sample: bool = False):
         """Fixed-shape chunked-prefill step for one request:
         ``(params, pools, tokens (C,), base, n_valid, table_row (n_lp,))
         -> (next_token, pools)`` — C is the fixed chunk size the caller
-        jits with (short chunks arrive padded with n_valid < C)."""
+        jits with (short chunks arrive padded with n_valid < C).
+
+        With ``sample=True`` the step takes four extra scalars
+        ``(seed, temperature, top_p, top_k)`` and the returned first
+        token is drawn at position base + n_valid - 1 under the shared
+        key schedule (bitwise greedy at temperature <= 0)."""
         cfg, env, flags = self.cfg, self.env, self.flags
         pspecs = paged_cache_specs(cfg, env)
 
-        def fn(params, pools, tokens, base, n_valid, table_row):
-            return M.paged_prefill_chunk(cfg, env, params, pools, tokens,
-                                         base, n_valid, table_row,
-                                         page_size=page_size, flags=flags)
+        if sample:
+            def fn(params, pools, tokens, base, n_valid, table_row, seed,
+                   temp, top_p, top_k):
+                return M.paged_prefill_chunk(
+                    cfg, env, params, pools, tokens, base, n_valid,
+                    table_row, page_size=page_size, flags=flags,
+                    sample=(seed, temp, top_p, top_k))
 
-        in_specs = (self.specs, pspecs, P(), P(), P(), P())
+            in_specs = (self.specs, pspecs) + (P(),) * 8
+        else:
+            def fn(params, pools, tokens, base, n_valid, table_row):
+                return M.paged_prefill_chunk(
+                    cfg, env, params, pools, tokens, base, n_valid,
+                    table_row, page_size=page_size, flags=flags)
+
+            in_specs = (self.specs, pspecs, P(), P(), P(), P())
         out_specs = (P(), pspecs)
+        return _shard_map(fn, self.mesh, in_specs, out_specs)
+
+    # -- speculative decoding (draft proposals + verify) -----------------------
+    def make_paged_draft_propose(self, page_size: int, k: int):
+        """Drafter-side propose step (call on the DRAFTER's runner):
+        ``(params, pools, token (B,), pos0 (B,), table, active, seeds,
+        temperature, top_p, top_k) -> (drafts (B, k),
+        draft_probs (B, k, Vp), pools)`` — a scan of k+1 sampled decode
+        steps over the drafter's own page pools (stream STREAM_DRAFT)."""
+        cfg, env, flags = self.cfg, self.env, self.flags
+        pspecs = paged_cache_specs(cfg, env)
+
+        def fn(params, pools, token, pos0, table, active, seeds, temp,
+               top_p, top_k):
+            return M.paged_draft_propose(
+                cfg, env, params, pools, token, pos0, table, active,
+                (seeds, temp, top_p, top_k), k=k, page_size=page_size,
+                flags=flags)
+
+        in_specs = (self.specs, pspecs) + (P(),) * 8
+        out_specs = (P(), P(), pspecs)
+        return _shard_map(fn, self.mesh, in_specs, out_specs)
+
+    def make_paged_verify_step(self, page_size: int, k: int):
+        """Target-side verify step: ``(params, pools, tokens (B, k+1),
+        pos0 (B,), table, active, draft_probs (B, k, Vp), seeds,
+        temperature, top_p, top_k) -> (n_acc (B,), out (B, k+1), pools)``
+        — one paged-prefill-shaped pass scoring all k+1 positions plus
+        on-device spec-sampling accept/reject (model.paged_verify_step)."""
+        cfg, env, flags = self.cfg, self.env, self.flags
+        pspecs = paged_cache_specs(cfg, env)
+
+        def fn(params, pools, tokens, pos0, table, active, draft_probs,
+               seeds, temp, top_p, top_k):
+            return M.paged_verify_step(
+                cfg, env, params, pools, tokens, pos0, table, active,
+                draft_probs, (seeds, temp, top_p, top_k),
+                page_size=page_size, flags=flags)
+
+        in_specs = (self.specs, pspecs) + (P(),) * 9
+        out_specs = (P(), P(), pspecs)
         return _shard_map(fn, self.mesh, in_specs, out_specs)
 
     def init_cache_shapes(self, global_batch: int, seq_len: int):

@@ -30,6 +30,8 @@ from repro import api
 from repro.configs.base import get_config, get_smoke_config
 from repro.launch.mesh import make_local_mesh
 from repro.models import model as M
+from repro.serving.draft import (ConfigDrafter, SelfDrafter,
+                                 adapt_drafter_config)
 from repro.serving.flood import (FloodEngine, GenRequest,
                                  baseline_step_engine, quantize_microbatch)
 from repro.serving.online import (OnlineConfig, OnlineEngine,
@@ -38,18 +40,26 @@ from repro.serving.segment_cache import SegmentCache
 
 
 def build_model_engine(cfg, mesh, n_stages: int, seq_len: int,
-                       batch: int, flags: M.RunFlags = M.DEFAULT_FLAGS):
+                       batch: int, flags: M.RunFlags = M.DEFAULT_FLAGS,
+                       temperature: float = 0.0, top_p: float = 1.0,
+                       top_k: int = 0, seed: int = 0):
     """Real-model Flood engine: layers split into n_stages jitted chunks.
 
     Stage state carries (x, caches_slice, pos); decode math is exactly the
     model's block_decode.  `flags.moe_dispatch` selects the MoE decode
     path — with tp > 1 and "ep" the decode batch routes tokens over the
     mesh through the same all-to-all dispatch training uses.
+
+    Sampling knobs ride the sampled decode step as per-sequence data;
+    each request draws under seed `(seed + rid) % 2**31` with the same
+    counter-based (seed, position, stream) key schedule the online
+    engine uses, so an offline run reproduces an online request's token
+    stream for matching seeds/positions (temperature 0 = exact greedy).
     """
     runner = api.Runner(cfg, mesh, fsdp=False, seq_parallel=False,
                         max_seq=seq_len, flags=flags)
     params = runner.init_params(0)
-    decode, _ = runner.make_decode_step(batch, seq_len)
+    decode, _ = runner.make_decode_step(batch, seq_len, sample=True)
     decode = jax.jit(decode)
     caches = M.init_caches(cfg, runner.env, batch, seq_len,
                            cross_len=cfg.encoder_seq_len)
@@ -57,23 +67,44 @@ def build_model_engine(cfg, mesh, n_stages: int, seq_len: int,
 
     def embed_fn(reqs):
         toks = np.zeros((batch,), np.int32)
+        seeds = np.zeros((batch,), np.int32)
         for i, r in enumerate(reqs[:batch]):
             toks[i] = (r.out[-1] if r.out else r.prompt[-1])
-        return {"tokens": jnp.asarray(toks), "reqs": len(reqs)}
+            seeds[i] = (seed + r.rid) % (2 ** 31)
+        return {"tokens": jnp.asarray(toks), "seeds": jnp.asarray(seeds),
+                "reqs": len(reqs)}
 
     def stage_fn(_i):
         def fn(x):
             return x  # layer stages fused into head_fn for the real model
         return fn
 
+    knobs = (np.full((batch,), temperature, np.float32),
+             np.full((batch,), top_p, np.float32),
+             np.full((batch,), top_k, np.int32))
+
     def head_fn(x, reqs):
         nonlocal state
-        nxt, state["caches"] = decode(params, state["caches"], x["tokens"],
-                                      jnp.int32(state["pos"]))
+        nxt, state["caches"] = decode(
+            params, state["caches"], x["tokens"], jnp.int32(state["pos"]),
+            x["seeds"], jnp.asarray(knobs[0]), jnp.asarray(knobs[1]),
+            jnp.asarray(knobs[2]))
         state["pos"] += 1
         return np.asarray(nxt)[:len(reqs)]
 
     return embed_fn, [stage_fn(i) for i in range(n_stages)], head_fn
+
+
+def make_drafter(cfg, args):
+    """Resolve the --draft-* flags into a serving.draft drafter (None
+    when speculation is off)."""
+    if args.spec_k <= 0:
+        return None
+    if args.draft_arch:
+        dcfg = (get_smoke_config(args.draft_arch) if args.smoke
+                else get_config(args.draft_arch))
+        return ConfigDrafter(adapt_drafter_config(dcfg, cfg))
+    return SelfDrafter(draft_layers=args.draft_layers)
 
 
 def run_online(cfg, mesh, flags, args) -> None:
@@ -85,10 +116,12 @@ def run_online(cfg, mesh, flags, args) -> None:
         max_slots=quantize_microbatch(args.slots, args.tp),
         max_context=args.seq, page_size=args.page_size,
         n_pages=args.pages,
-        prefill_chunk=quantize_microbatch(args.prefill_chunk, args.tp))
-    eng = OnlineEngine(runner, params, ocfg)
+        prefill_chunk=quantize_microbatch(args.prefill_chunk, args.tp),
+        temperature=args.temperature, top_p=args.top_p, top_k=args.top_k,
+        seed=args.seed, spec_k=args.spec_k)
+    eng = OnlineEngine(runner, params, ocfg, drafter=make_drafter(cfg, args))
     # one engine serves every rate (the pool drains between loads); a
-    # small warm-up load eats the two XLA compiles so the reported
+    # small warm-up load eats the XLA compiles so the reported
     # percentiles measure scheduling, not compilation
     run_poisson_load(eng, rate=100.0, n_requests=2,
                      prompt_len=args.prompt_len, max_new=2,
@@ -98,12 +131,16 @@ def run_online(cfg, mesh, flags, args) -> None:
         rep = run_poisson_load(eng, rate=rate, n_requests=args.requests,
                                prompt_len=args.prompt_len,
                                max_new=args.max_new,
-                               vocab_size=cfg.vocab_size)
+                               vocab_size=cfg.vocab_size,
+                               shared_prefix_len=args.shared_prefix_len)
         print(f"[online] rate={rate:g}/s tok/s={rep['tok_s']:.1f} "
               f"ttft p50/p99={rep['ttft_p50_ms']:.0f}/"
               f"{rep['ttft_p99_ms']:.0f}ms itl p50/p99="
               f"{rep['itl_p50_ms']:.1f}/{rep['itl_p99_ms']:.1f}ms "
-              f"preempts={rep['preemptions']}")
+              f"preempts={rep['preemptions']} "
+              f"acc={rep['acceptance_rate']:.2f} "
+              f"ticks/tok={rep['decode_ticks_per_token']:.2f} "
+              f"prefix_hits={rep['prefix_hits']}")
         cases.append(rep)
     out = {
         "bench": "online continuous-batching serving (paged KV)",
@@ -116,6 +153,9 @@ def run_online(cfg, mesh, flags, args) -> None:
                    "n_pages": ocfg.pool_pages(),
                    "prefill_chunk": ocfg.prefill_chunk,
                    "max_context": ocfg.max_context,
+                   "temperature": ocfg.temperature, "top_p": ocfg.top_p,
+                   "top_k": ocfg.top_k, "spec_k": ocfg.spec_k,
+                   "drafter": (eng.drafter.name if eng.drafter else None),
                    "tp": args.tp, "moe_dispatch": args.moe_dispatch},
         "note": ("interpret-mode CPU wall clock - scheduling/latency "
                  "shape, NOT TPU performance"),
@@ -152,6 +192,29 @@ def main():
     ap.add_argument("--rates", default="4,16",
                     help="online: comma-separated Poisson arrival rates "
                          "(req/s), one load run each")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = exact greedy)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 = off)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation (0 = off)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="sampling seed base; request rid r draws under "
+                         "seed (seed + r) %% 2**31")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="online: speculative draft length per tick "
+                         "(0 = off)")
+    ap.add_argument("--draft-layers", type=int, default=1,
+                    help="online: self-draft drafter depth (first N "
+                         "target layers, no new weights)")
+    ap.add_argument("--draft-arch", default=None,
+                    help="online: use a separate small arch as the "
+                         "drafter instead of self-draft (vocab aligned "
+                         "via adapt_drafter_config; fresh weights)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="online: tokens of shared system prompt per "
+                         "request (hot-prefix workload; 0 = disjoint "
+                         "prompts)")
     ap.add_argument("--report", default="BENCH_serve_online.json",
                     help="online: where the load report JSON lands")
     ap.add_argument("--tp", type=int, default=1,
@@ -179,7 +242,9 @@ def main():
 
     micro = quantize_microbatch(args.microbatch, args.tp)
     embed_fn, stage_fns, head_fn = build_model_engine(
-        cfg, mesh, args.stages, args.seq, micro, flags=flags)
+        cfg, mesh, args.stages, args.seq, micro, flags=flags,
+        temperature=args.temperature, top_p=args.top_p, top_k=args.top_k,
+        seed=args.seed)
 
     if args.baseline:
         stats = baseline_step_engine(head_fn, embed_fn, reqs)

@@ -92,3 +92,114 @@ def sharded_argmax(env: AxisEnv, logits_loc: jax.Array) -> jax.Array:
     cand = jnp.where(loc_max >= gmax, r * v_loc + loc_idx,
                      jnp.iinfo(jnp.int32).max)
     return -env.pmax_tp(-cand)   # min over tp = lowest-id global argmax
+
+
+# ---------------------------------------------------------------------------
+# Stochastic sampling (temperature / top-k / top-p) over the sharded vocab
+# ---------------------------------------------------------------------------
+#
+# The serving engines sample with a counter-based key schedule: every draw
+# is keyed by (seed, position, stream), where `seed` is per-request,
+# `position` is the global sequence position of the *input* token the
+# logits came from, and `stream` separates independent draw purposes.
+# This makes sampling a pure function of (logits, seed, pos) — offline
+# and online engines emit identical streams under a shared seed schedule,
+# and preemption replay is exact (emitted tokens are never re-sampled;
+# the next draw re-derives the same key).  All sampling knobs are DATA
+# ((T,) arrays), so mixed-temperature batches share one compiled step.
+
+STREAM_SAMPLE = 0     # canonical next-token draw (offline == online)
+STREAM_DRAFT = 1      # drafter proposals (spec decode)
+STREAM_ACCEPT = 2     # accept/reject uniforms (spec decode)
+STREAM_RESID = 3      # residual/bonus draw on rejection (spec decode)
+
+
+def sample_keys(seeds: jax.Array, pos: jax.Array, stream: int) -> jax.Array:
+    """Per-row PRNG keys from the (seed, position, stream) schedule.
+    seeds (T,) int32/uint32, pos (T,) int32 -> (T, 2) uint32 key data."""
+    base = jax.random.PRNGKey(0)
+
+    def one(s, p):
+        k = jax.random.fold_in(base, s)
+        k = jax.random.fold_in(k, p)
+        return jax.random.fold_in(k, jnp.uint32(stream))
+
+    return jax.vmap(one)(seeds.astype(jnp.uint32), pos.astype(jnp.uint32))
+
+
+def transform_logits(full_logits: jax.Array, temperature: jax.Array,
+                     top_p: jax.Array, top_k: jax.Array) -> jax.Array:
+    """Full-vocab logits (T, V) -> sampling distribution (T, V) fp32.
+
+    Pure per-row math (no collectives) so it unit-tests on plain arrays.
+    Order: temperature scale -> top-k cut -> softmax -> top-p (nucleus)
+    cut -> renormalize.  Knobs are per-row data: temperature <= 0 rows
+    are returned as-is here (callers overwrite them with the exact
+    argmax one-hot — see `sampled_probs`); top_k <= 0 and top_p >= 1
+    disable their cuts.  Ties at the top-k/top-p boundary keep every
+    equal-scoring token (documented caveat: the nucleus can hold a few
+    more tokens than the minimal mass-covering set)."""
+    T, V = full_logits.shape
+    x = full_logits.astype(jnp.float32)
+    t = jnp.maximum(temperature.astype(jnp.float32), 1e-6)[:, None]
+    x = x / t
+    # top-k: keep logits >= the kth largest (row-wise threshold)
+    srt = jnp.sort(x, axis=-1)[:, ::-1]                    # descending
+    kth = jnp.take_along_axis(
+        srt, jnp.clip(top_k.astype(jnp.int32), 1, V)[:, None] - 1,
+        axis=-1)
+    x = jnp.where((top_k[:, None] > 0) & (x < kth), -jnp.inf, x)
+    probs = jax.nn.softmax(x, axis=-1)
+    # top-p: smallest prefix of the sorted probs with mass >= top_p;
+    # exclusive cumsum < top_p keeps at least the top token
+    ps = jnp.sort(probs, axis=-1)[:, ::-1]
+    cum = jnp.cumsum(ps, axis=-1) - ps                     # exclusive
+    keep_sorted = cum < jnp.minimum(top_p, 1.0)[:, None]
+    # map back via the smallest kept probability as a threshold
+    thr = jnp.min(jnp.where(keep_sorted, ps, jnp.inf), axis=-1)
+    keep = (top_p[:, None] >= 1.0) | (probs >= thr[:, None])
+    probs = jnp.where(keep, probs, 0.0)
+    return probs / jnp.maximum(jnp.sum(probs, axis=-1, keepdims=True),
+                               1e-30)
+
+
+def sampled_probs(cfg, env: AxisEnv, logits_loc: jax.Array,
+                  temperature: jax.Array, top_p: jax.Array,
+                  top_k: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(T, V_loc) sharded logits -> (greedy (T,), probs (T, Vp) fp32).
+
+    `probs` is the REPLICATED transformed sampling distribution over the
+    padded vocab (identical on every tp rank: the gather is deterministic
+    and the transforms are collective-free), with padding columns exactly
+    0.  Rows with temperature <= 0 are exact one-hots of `sharded_argmax`
+    — same lowest-global-id tie-break — so greedy spec-decode accept math
+    degenerates to exact token comparison with no special-casing."""
+    greedy = sharded_argmax(env, logits_loc).astype(jnp.int32)
+    full = env.all_gather_tp(logits_loc, axis=1)           # (T, Vp)
+    vp = full.shape[-1]
+    gid = jnp.arange(vp)
+    full = jnp.where(gid[None, :] < cfg.vocab_size, full, -jnp.inf)
+    probs = transform_logits(full, temperature, top_p, top_k)
+    onehot = jax.nn.one_hot(greedy, vp, dtype=jnp.float32)
+    probs = jnp.where((temperature <= 0.0)[:, None], onehot, probs)
+    return greedy, probs
+
+
+def sharded_sample(cfg, env: AxisEnv, logits_loc: jax.Array, *,
+                   seeds: jax.Array, pos: jax.Array, temperature: jax.Array,
+                   top_p: jax.Array, top_k: jax.Array,
+                   stream: int = STREAM_SAMPLE
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Temperature/top-k/top-p sampling over the tp-sharded vocab.
+
+    logits (T, V_loc); all knobs (T,) per-row data.  Returns
+    (token (T,) int32, probs (T, Vp) — the distribution actually sampled
+    from, which spec-decode accept math consumes as p/q).  Rows with
+    temperature <= 0 return the bitwise `sharded_argmax` token."""
+    greedy, probs = sampled_probs(cfg, env, logits_loc, temperature,
+                                  top_p, top_k)
+    keys = sample_keys(seeds, pos, stream)
+    cat = jax.vmap(lambda k, p: jax.random.categorical(k, jnp.log(p)))(
+        keys, probs).astype(jnp.int32)
+    tok = jnp.where(temperature <= 0.0, greedy, cat)
+    return tok.astype(jnp.int32), probs

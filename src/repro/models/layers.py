@@ -762,3 +762,70 @@ def paged_prefill_attention(cfg, env: AxisEnv, params: Params, x: jax.Array,
     local = jax.lax.dynamic_slice_in_dim(attn, lo, ad.local_heads, axis=1)
     partial = local.reshape(C, ad.local_heads * hd) @ wo
     return partial, pool
+
+
+def paged_verify_attention(cfg, env: AxisEnv, params: Params, x: jax.Array,
+                           pool: Dict[str, jax.Array], pos: jax.Array,
+                           table: jax.Array, active: jax.Array, *,
+                           page_size: int):
+    """Speculative-decode verify: Q consecutive tokens per slot in one
+    paged-prefill-shaped pass over the slot batch.
+
+    x (B, Q, d) replicated over tp — slot b's candidate tokens at
+    positions pos[b, 0..Q-1] (consecutive: pos[b, j] = pos[b, 0] + j);
+    table (B, n_lp); active (B,).  Writes all B*Q candidate KV rows
+    (masked lanes -> scratch page 0), then each query attends causally
+    over its slot's pages with the same `_decode_scores_combine` tail as
+    decode/prefill — so verify logits at a position are the decode
+    logits at that position by construction.  Returns
+    (partial (B*Q, d), pool)."""
+    ad = AttnDims.build(cfg, env)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    from repro.kernels import ops as kops
+    B, Q, d = x.shape
+    hd = ad.head_dim
+    n_lp = table.shape[1]
+    ps_loc, S_g, gpos = _paged_geometry(pool, n_lp, page_size, env)
+    r = env.tp_index()
+
+    wq = env.gather_fsdp(params["wq"], 0, dtype=cdt)
+    wk = env.gather_fsdp(params["wk"], 0, dtype=cdt)
+    wv = env.gather_fsdp(params["wv"], 0, dtype=cdt)
+    wo = env.gather_fsdp(params["wo"], 1, dtype=cdt)
+
+    xf = x.reshape(B * Q, d)
+    posf = pos.reshape(B * Q)
+    q_local = (xf @ wq).reshape(B * Q, ad.local_heads, hd)
+    k_new = (xf @ wk).reshape(B * Q, ad.n_kv, hd)
+    v_new = (xf @ wv).reshape(B * Q, ad.n_kv, hd)
+    if cfg.use_rope:
+        cos, sin = rope_angles(posf, hd, cfg.rope_theta)   # (B*Q, hd/2)
+        q_local = apply_rope(q_local[:, None], cos[:, None],
+                             sin[:, None])[:, 0]
+        k_new = apply_rope(k_new[:, None], cos[:, None], sin[:, None])[:, 0]
+    q_all = env.all_gather_tp(q_local, axis=1)             # (B*Q, Hp, hd)
+
+    lp = jnp.clip(pos // page_size, 0, n_lp - 1)           # (B, Q)
+    pp = jnp.take_along_axis(table, lp, axis=1)            # (B, Q)
+    owns = (active[:, None] & (pp > 0)
+            & ((pos % page_size) // ps_loc == r))
+    pool = _paged_write(pool, k_new.reshape(B, Q, ad.n_kv, hd),
+                        v_new.reshape(B, Q, ad.n_kv, hd), pos, pp, owns,
+                        page_size=page_size, env=env, cdt=cdt)
+
+    k_g = kops.paged_gather(pool["k"], table).reshape(B, S_g, ad.n_kv, hd)
+    v_g = kops.paged_gather(pool["v"], table).reshape(B, S_g, ad.n_kv, hd)
+    pvalid = jnp.repeat(table > 0, ps_loc, axis=1)         # (B, S_g)
+    valid = (pvalid[:, None, :]
+             & (gpos[None, None, :] <= pos[:, :, None]))   # (B, Q, S_g)
+    kb = jnp.broadcast_to(k_g[:, None], (B, Q) + k_g.shape[1:])
+    vb = jnp.broadcast_to(v_g[:, None], (B, Q) + v_g.shape[1:])
+    attn = _decode_scores_combine(
+        cfg, env, ad, q_all, kb.reshape((B * Q,) + k_g.shape[1:]),
+        vb.reshape((B * Q,) + v_g.shape[1:]),
+        valid.reshape(B * Q, S_g), cdt)
+
+    lo = r * ad.local_heads
+    local = jax.lax.dynamic_slice_in_dim(attn, lo, ad.local_heads, axis=1)
+    partial = local.reshape(B * Q, ad.local_heads * hd) @ wo
+    return partial, pool

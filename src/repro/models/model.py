@@ -519,17 +519,11 @@ def block_decode_paged(cfg, env: AxisEnv, params, x, pool, pos, table,
     return x, pool
 
 
-def paged_decode_step(cfg: ModelConfig, env: AxisEnv, params, pools,
-                      token: jax.Array, pos: jax.Array, table: jax.Array,
-                      active: jax.Array, *, page_size: int,
-                      flags: RunFlags = DEFAULT_FLAGS):
-    """One greedy decode tick over the slot batch.
-
-    token (B,) input token per slot; pos (B,) position being written;
-    table (B, n_lp) page table; active (B,) bool.  Inactive slots compute
-    harmlessly (their writes land in the scratch page, their outputs are
-    ignored by the host).  Returns (next (B,), pools)."""
-    denv = dataclasses.replace(env, seq_parallel=False)
+def _paged_decode_logits(cfg: ModelConfig, denv: AxisEnv, params, pools,
+                         token: jax.Array, pos: jax.Array, table: jax.Array,
+                         active: jax.Array, *, page_size: int,
+                         flags: RunFlags = DEFAULT_FLAGS):
+    """Shared paged-decode body: one token per slot -> (logits, pools)."""
     x = emb.embed_tokens(cfg, denv, params["embed"], token)   # (B, d)
     ffn = _ffn_kind(cfg, cfg.n_layers - 1)
 
@@ -552,9 +546,192 @@ def paged_decode_step(cfg: ModelConfig, env: AxisEnv, params, pools,
             new_pools.append(p)
         pools = new_pools
     x = L.apply_norm(cfg, denv, params["final_norm"], x)
-    logits = emb.lm_logits(cfg, denv, params["embed"], x)
-    nxt = emb.sharded_argmax(denv, logits)
-    return nxt.astype(jnp.int32), pools
+    return emb.lm_logits(cfg, denv, params["embed"], x), pools
+
+
+def paged_decode_step(cfg: ModelConfig, env: AxisEnv, params, pools,
+                      token: jax.Array, pos: jax.Array, table: jax.Array,
+                      active: jax.Array, *, page_size: int,
+                      flags: RunFlags = DEFAULT_FLAGS, sample=None):
+    """One decode tick over the slot batch.
+
+    token (B,) input token per slot; pos (B,) position being written;
+    table (B, n_lp) page table; active (B,) bool.  Inactive slots compute
+    harmlessly (their writes land in the scratch page, their outputs are
+    ignored by the host).  `sample=None` keeps the greedy path;
+    `sample=(seeds, temperature, top_p, top_k)` — all (B,) arrays —
+    draws from the transformed distribution under the (seed, pos,
+    stream) key schedule, with temperature<=0 rows bitwise-equal to the
+    greedy path.  Returns (next (B,), pools)."""
+    denv = dataclasses.replace(env, seq_parallel=False)
+    logits, pools = _paged_decode_logits(
+        cfg, denv, params, pools, token, pos, table, active,
+        page_size=page_size, flags=flags)
+    if sample is None:
+        return emb.sharded_argmax(denv, logits).astype(jnp.int32), pools
+    seeds, temp, top_p, top_k = sample
+    nxt, _ = emb.sharded_sample(cfg, denv, logits, seeds=seeds, pos=pos,
+                                temperature=temp, top_p=top_p, top_k=top_k,
+                                stream=emb.STREAM_SAMPLE)
+    return nxt, pools
+
+
+# ---- speculative decoding (draft proposals + one verify pass) --------------
+#
+# The drafter (serving/draft.py: truncated-layer self-draft or any small
+# paged-compatible model sharing the target vocab) proposes k tokens per
+# slot with `paged_draft_propose` — a scan of k+1 sampled decode steps
+# over its OWN page pools (same page ids as the target's, so admission /
+# preemption / prefix sharing transfer untouched; the +1 step back-fills
+# the drafter KV at the last proposed position so a fully-accepted round
+# leaves no hole).  `paged_verify_step` then scores all k+1 positions in
+# one paged-prefill-shaped target pass and runs standard spec-sampling
+# accept/reject ON DEVICE: accept draft d while u*q(d) < p(d), then one
+# residual draw from (p - q)+ (the bonus draw from p when everything was
+# accepted is the q=0 special case of the same formula).  temperature<=0
+# rows use exact argmax one-hots for p and q, so greedy acceptance
+# degenerates to token equality and the emitted stream is bitwise the
+# non-speculative greedy stream.
+
+
+def paged_draft_propose(cfg: ModelConfig, env: AxisEnv, params, pools,
+                        token: jax.Array, pos0: jax.Array, table: jax.Array,
+                        active: jax.Array, sample, *, k: int,
+                        page_size: int, flags: RunFlags = DEFAULT_FLAGS):
+    """Propose k draft tokens per slot with the drafter model.
+
+    token (B,) the pending (last emitted, unwritten) token per slot; pos0
+    (B,) its position.  Runs k+1 chained sampled decode steps (stream
+    STREAM_DRAFT): steps 0..k-1 yield drafts d_1..d_k, step k only
+    writes d_k's KV (its sample is discarded).  Returns
+    (drafts (B, k), draft_probs (B, k, Vp), pools)."""
+    denv = dataclasses.replace(env, seq_parallel=False)
+    seeds, temp, top_p, top_k = sample
+
+    def body(carry, i):
+        tok, pools = carry
+        pos = pos0 + i
+        logits, pools = _paged_decode_logits(
+            cfg, denv, params, pools, tok, pos, table, active,
+            page_size=page_size, flags=flags)
+        nxt, probs = emb.sharded_sample(
+            cfg, denv, logits, seeds=seeds, pos=pos, temperature=temp,
+            top_p=top_p, top_k=top_k, stream=emb.STREAM_DRAFT)
+        return (nxt, pools), (nxt, probs)
+
+    (_, pools), (toks, probs) = jax.lax.scan(
+        body, (token, pools), jnp.arange(k + 1))
+    drafts = jnp.transpose(toks[:k], (1, 0))               # (B, k)
+    draft_probs = jnp.transpose(probs[:k], (1, 0, 2))      # (B, k, Vp)
+    return drafts, draft_probs, pools
+
+
+def block_verify_paged(cfg, env: AxisEnv, params, x, pool, pos, table,
+                       active, *, B: int, Q: int, page_size: int, ffn: str,
+                       flags: RunFlags = DEFAULT_FLAGS):
+    """One layer of the k+1-token verify pass: x (B*Q, d)."""
+    h = L.apply_norm(cfg, env, params["norm1"], x)
+    partial, pool["self"] = L.paged_verify_attention(
+        cfg, env, params["attn"], h.reshape(B, Q, -1), pool["self"], pos,
+        table, active, page_size=page_size)
+    x = x + env.psum_tp(partial)
+
+    h = L.apply_norm(cfg, env, params["norm2"], x)
+    if ffn == "moe":
+        partial, _, _ = moe_lib.moe_ffn(cfg, env, params["moe"], h,
+                                        train=False,
+                                        dispatch=flags.moe_dispatch)
+        x = x + env.psum_tp(partial)
+    else:
+        x = x + env.psum_tp(L.apply_mlp(cfg, env, params["mlp"], h))
+    return x, pool
+
+
+def paged_verify_step(cfg: ModelConfig, env: AxisEnv, params, pools,
+                      tokens: jax.Array, pos0: jax.Array, table: jax.Array,
+                      active: jax.Array, draft_probs: jax.Array, sample, *,
+                      page_size: int, flags: RunFlags = DEFAULT_FLAGS):
+    """Score k+1 candidate positions per slot and accept/reject drafts.
+
+    tokens (B, K+1): column 0 the pending token, columns 1..K the drafts;
+    pos0 (B,) the pending token's position; draft_probs (B, K, Vp) the
+    drafter distributions each draft was sampled from; sample the
+    (seeds, temperature, top_p, top_k) slot arrays.  Returns
+    (n_acc (B,) int32 accepted drafts in [0, K],
+     out (B, K+1) int32 — out[:, :n_acc] the accepted drafts and
+     out[:, n_acc] the residual/bonus token; later columns are garbage —
+     and the updated pools).  The target KV for ALL K+1 positions is
+    written; the host commits n_acc+1 tokens and rewinds the page tail
+    (`PageAllocator.trim`)."""
+    denv = dataclasses.replace(env, seq_parallel=False)
+    B, K1 = tokens.shape
+    K = K1 - 1
+    seeds, temp, top_p, top_k = sample
+    pos = pos0[:, None] + jnp.arange(K1)[None, :]          # (B, K1)
+
+    x = emb.embed_tokens(cfg, denv, params["embed"], tokens.reshape(-1))
+    ffn = _ffn_kind(cfg, cfg.n_layers - 1)
+    if cfg.uniform_blocks:
+        def body(x, inp):
+            lp, pool = inp
+            x, pool = block_verify_paged(cfg, denv, lp, x, pool, pos,
+                                         table, active, B=B, Q=K1,
+                                         page_size=page_size, ffn=ffn,
+                                         flags=flags)
+            return x, pool
+
+        x, pools = jax.lax.scan(body, x, (params["blocks"], pools))
+    else:
+        new_pools = []
+        for i, lp in enumerate(params["blocks"]):
+            x, p = block_verify_paged(cfg, denv, lp, x, pools[i], pos,
+                                      table, active, B=B, Q=K1,
+                                      page_size=page_size,
+                                      ffn=_ffn_kind(cfg, i), flags=flags)
+            new_pools.append(p)
+        pools = new_pools
+    x = L.apply_norm(cfg, denv, params["final_norm"], x)
+    logits = emb.lm_logits(cfg, denv, params["embed"], x)  # (B*K1, v_loc)
+
+    rep = lambda a: jnp.repeat(a, K1, axis=0)
+    greedy, probs = emb.sampled_probs(cfg, denv, logits, rep(temp),
+                                      rep(top_p), rep(top_k))
+    vp = probs.shape[-1]
+    greedy = greedy.reshape(B, K1)
+    probs = probs.reshape(B, K1, vp)
+
+    # -- accept/reject: u * q(d) < p(d), sequential via cumprod ------------
+    d = tokens[:, 1:]                                      # (B, K)
+    p_d = jnp.take_along_axis(probs[:, :K], d[..., None], axis=2)[..., 0]
+    q_d = jnp.take_along_axis(draft_probs, d[..., None], axis=2)[..., 0]
+    posd = pos[:, :K]
+    ukeys = emb.sample_keys(rep(seeds).reshape(B, K1)[:, :K].reshape(-1),
+                            posd.reshape(-1), emb.STREAM_ACCEPT)
+    u = jax.vmap(jax.random.uniform)(ukeys).reshape(B, K)
+    acc = (u * q_d < p_d) & active[:, None]
+    live = jnp.cumprod(acc.astype(jnp.int32), axis=1)
+    n_acc = jnp.sum(live, axis=1).astype(jnp.int32)        # (B,)
+
+    # -- residual/bonus draw at position n_acc -----------------------------
+    p_sel = jnp.take_along_axis(probs, n_acc[:, None, None],
+                                axis=1)[:, 0]              # (B, Vp)
+    q_pad = jnp.concatenate([draft_probs,
+                             jnp.zeros((B, 1, vp), draft_probs.dtype)], 1)
+    q_sel = jnp.take_along_axis(q_pad, n_acc[:, None, None], axis=1)[:, 0]
+    res = jnp.maximum(p_sel - q_sel, 0.0)
+    rsum = jnp.sum(res, axis=-1, keepdims=True)
+    res = jnp.where(rsum > 0, res, p_sel)                  # numerical guard
+    rkeys = emb.sample_keys(seeds, pos0 + n_acc, emb.STREAM_RESID)
+    cat = jax.vmap(lambda kk, p: jax.random.categorical(kk, jnp.log(p)))(
+        rkeys, res).astype(jnp.int32)
+    g_sel = jnp.take_along_axis(greedy, n_acc[:, None], axis=1)[:, 0]
+    extra = jnp.where(temp <= 0.0, g_sel, cat).astype(jnp.int32)
+
+    j = jnp.arange(K1)[None, :]
+    d_pad = jnp.concatenate([d, jnp.zeros((B, 1), d.dtype)], axis=1)
+    out = jnp.where(j < n_acc[:, None], d_pad,
+                    jnp.where(j == n_acc[:, None], extra[:, None], 0))
+    return n_acc, out.astype(jnp.int32), pools
 
 
 def block_prefill_paged(cfg, env: AxisEnv, params, x, pool, base, n_valid,
@@ -581,14 +758,17 @@ def block_prefill_paged(cfg, env: AxisEnv, params, x, pool, base, n_valid,
 def paged_prefill_chunk(cfg: ModelConfig, env: AxisEnv, params, pools,
                         tokens: jax.Array, base: jax.Array,
                         n_valid: jax.Array, table_row: jax.Array, *,
-                        page_size: int, flags: RunFlags = DEFAULT_FLAGS):
+                        page_size: int, flags: RunFlags = DEFAULT_FLAGS,
+                        sample=None):
     """Prefill one chunk of one request's prompt into its pages.
 
     tokens (C,) the chunk (tail past n_valid is padding); base (scalar)
     tokens already written; table_row (n_lp,) the request's page table.
-    Returns (next (scalar int32) — the greedy token after the last valid
-    chunk position, meaningful only on the request's final chunk — and
-    the updated pools)."""
+    Returns (next (scalar int32) — the token after the last valid chunk
+    position, meaningful only on the request's final chunk — and the
+    updated pools).  `sample=(seed, temperature, top_p, top_k)` scalars
+    switches the returned token from greedy to the shared-key-schedule
+    draw at position base + n_valid - 1 (bitwise greedy at temp<=0)."""
     denv = dataclasses.replace(env, seq_parallel=False)
     x = emb.embed_tokens(cfg, denv, params["embed"], tokens)  # (C, d)
     ffn = _ffn_kind(cfg, cfg.n_layers - 1)
@@ -616,14 +796,28 @@ def paged_prefill_chunk(cfg: ModelConfig, env: AxisEnv, params, pools,
     last = jax.lax.dynamic_slice_in_dim(
         x, jnp.clip(n_valid - 1, 0, x.shape[0] - 1), 1, axis=0)
     logits = emb.lm_logits(cfg, denv, params["embed"], last)
-    nxt = emb.sharded_argmax(denv, logits)
+    if sample is None:
+        return emb.sharded_argmax(denv, logits)[0].astype(jnp.int32), pools
+    seed, temp, top_p, top_k = sample
+    one = lambda v, dt: jnp.reshape(v, (1,)).astype(dt)
+    nxt, _ = emb.sharded_sample(
+        cfg, denv, logits, seeds=one(seed, jnp.uint32),
+        pos=one(base + n_valid - 1, jnp.int32),
+        temperature=one(temp, jnp.float32), top_p=one(top_p, jnp.float32),
+        top_k=one(top_k, jnp.int32), stream=emb.STREAM_SAMPLE)
     return nxt[0].astype(jnp.int32), pools
 
 
 def decode_step(cfg: ModelConfig, env: AxisEnv, params, caches,
                 token: jax.Array, pos: jax.Array,
-                flags: RunFlags = DEFAULT_FLAGS):
-    """One greedy decode step.  token (B_loc,) -> (next (B_loc,), caches)."""
+                flags: RunFlags = DEFAULT_FLAGS, sample=None):
+    """One decode step.  token (B_loc,) -> (next (B_loc,), caches).
+
+    Greedy by default; `sample=(seeds, temperature, top_p, top_k)` —
+    (B_loc,) arrays — draws under the SAME (seed, pos, stream) key
+    schedule as the online paged path, so offline and online engines
+    emit identical streams for matching seeds (bitwise greedy at
+    temperature <= 0)."""
     denv = dataclasses.replace(env, seq_parallel=False)
     x = emb.embed_tokens(cfg, denv, params["embed"], token)   # (B, d)
 
@@ -652,5 +846,13 @@ def decode_step(cfg: ModelConfig, env: AxisEnv, params, caches,
         caches = new_caches
     x = L.apply_norm(cfg, denv, params["final_norm"], x)
     logits = emb.lm_logits(cfg, denv, params["embed"], x)
-    nxt = emb.sharded_argmax(denv, logits)
-    return nxt.astype(jnp.int32), caches
+    if sample is None:
+        return emb.sharded_argmax(denv, logits).astype(jnp.int32), caches
+    seeds, temp, top_p, top_k = sample
+    B = token.shape[0]
+    nxt, _ = emb.sharded_sample(
+        cfg, denv, logits, seeds=seeds,
+        pos=jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,)),
+        temperature=temp, top_p=top_p, top_k=top_k,
+        stream=emb.STREAM_SAMPLE)
+    return nxt, caches

@@ -37,6 +37,26 @@ offline engine: `max_slots` and `prefill_chunk` must satisfy
 `quantize_microbatch(n, tp) == n` (the EP all-to-all path slices token
 ownership over tp), checked at construction.
 
+Two newer layers ride the same fixed-shape contract:
+
+  * **Real sampling.**  Per-slot temperature / top-p / top-k / seed are
+    (B,)-shaped DATA into the jitted steps; draws use the counter-based
+    (seed, position, stream) key schedule in `models.embedding`, so
+    token streams are reproducible across preemption replay and match
+    the offline engine's `make_decode_step(sample=True)` for equal
+    seeds.  Temperature 0 is bitwise-equal to greedy argmax.
+
+  * **Speculative decoding** (`spec_k > 0` + a `serving.draft` drafter).
+    Each spec tick: the drafter proposes k tokens per slot (scan of
+    sampled decode steps over its OWN paged pools, same page ids as the
+    target), ONE target pass shaped like a k+1-query paged prefill
+    scores all candidate positions, and standard spec-sampling
+    accept/reject commits `n_acc + 1` tokens host-side —
+    `PageAllocator.trim` rewinds rejected tail pages (LIFO, so regrow
+    reacquires identical pages).  Greedy streams stay token-exact
+    versus non-speculative decode; acceptance only changes *speed*
+    (ticks per token), never the distribution.
+
 `run_poisson_load` is the load generator: Poisson arrivals at a given
 rate, per-request TTFT / inter-token latency / throughput percentiles —
 `launch/serve.py --online` reports them into BENCH_serve_online.json.
@@ -59,10 +79,17 @@ from repro.serving.segment_cache import PageAllocator
 
 @dataclasses.dataclass
 class OnlineConfig:
-    """Engine geometry.  `max_context` bounds prompt+generation per
-    request (the page-table width); `n_pages` sizes the shared pool
-    (default: every slot can hold a full context, +1 scratch page —
-    shrink it to exercise preemption)."""
+    """Engine geometry + default sampling/speculation knobs.
+
+    `max_context` bounds prompt+generation per request; `n_pages` sizes
+    the shared pool (default: every slot can hold a full context, +1
+    scratch page — shrink it to exercise preemption).  The sampling
+    fields are per-request DEFAULTS (an `OnlineRequest` can override any
+    of them); temperature 0 is exact greedy.  `spec_k > 0` turns on
+    speculative decoding (propose->verify->commit ticks) and requires a
+    drafter at engine construction; the page-table width then carries
+    `spec_k` extra positions of slack because the verify pass writes
+    k+1 candidate KV rows before the host commits."""
     max_slots: int
     max_context: int
     page_size: int = 16
@@ -70,10 +97,17 @@ class OnlineConfig:
     prefill_chunk: int = 8
     donate: bool = True
     eos_id: Optional[int] = None
+    # sampling defaults (per-request overridable)
+    temperature: float = 0.0
+    top_p: float = 1.0
+    top_k: int = 0
+    seed: int = 0          # request seed defaults to (seed + rid) % 2**31
+    # speculative decoding
+    spec_k: int = 0
 
     @property
     def max_pages(self) -> int:
-        return -(-self.max_context // self.page_size)
+        return -(-(self.max_context + self.spec_k) // self.page_size)
 
     def pool_pages(self) -> int:
         if self.n_pages is not None:
@@ -87,7 +121,14 @@ class OnlineRequest:
     prompt: np.ndarray
     max_new: int
     prefix_key: Optional[str] = None
+    prefix_len: int = 0              # tokens to auto-publish under prefix_key
     arrival_t: float = 0.0
+    # sampling overrides (None -> the OnlineConfig default); the seed is
+    # fixed per request, so preemption replay re-derives identical draws
+    temperature: Optional[float] = None
+    top_p: Optional[float] = None
+    top_k: Optional[int] = None
+    seed: Optional[int] = None
     out: List[int] = dataclasses.field(default_factory=list)
     state: str = "queued"            # queued | prefill | decode | done
     admit_t: Optional[float] = None
@@ -95,6 +136,7 @@ class OnlineRequest:
     finish_t: Optional[float] = None
     token_times: List[float] = dataclasses.field(default_factory=list)
     n_preempted: int = 0
+    n_decode_ticks: int = 0          # decode/spec ticks this slot rode
     # scheduler scratch (valid while the request holds a slot)
     fed: Optional[np.ndarray] = None   # tokens to prefill (prompt + out[:-1])
     prefill_pos: int = 0
@@ -113,7 +155,7 @@ class OnlineEngine:
     admission / completion / preemption churn.
     """
 
-    def __init__(self, runner, params, cfg: OnlineConfig):
+    def __init__(self, runner, params, cfg: OnlineConfig, drafter=None):
         M.check_paged_support(runner.cfg)
         env = runner.env
         tp = env.tp
@@ -146,22 +188,103 @@ class OnlineEngine:
         self.alloc = PageAllocator(n_pages, cfg.page_size)
         self.pools = runner.init_paged_pools(n_pages, cfg.page_size)
 
+        # speculative decoding: build the drafter model over its OWN page
+        # pools (same page ids / page size / pool count as the target, so
+        # admission, growth, preemption, prefix sharing, and trim all
+        # transfer to the drafter KV via the shared tables)
+        self.spec = cfg.spec_k > 0
+        self.drafter = drafter
+        if self.spec:
+            if drafter is None:
+                raise ValueError(
+                    f"spec_k={cfg.spec_k} > 0 requires a drafter (e.g. "
+                    f"serving.draft.SelfDrafter(draft_layers=...))")
+            if cfg.max_slots * (cfg.spec_k + 1) % tp:
+                raise ValueError(
+                    f"max_slots*(spec_k+1)={cfg.max_slots * (cfg.spec_k + 1)}"
+                    f" must be divisible by tp={tp} (the verify pass rides "
+                    f"the EP dispatch path with B*(k+1) tokens)")
+            self.drunner, self.dparams = drafter.build(runner, params)
+            if self.drunner.cfg.vocab_size != runner.cfg.vocab_size:
+                raise ValueError(
+                    f"drafter vocab_size={self.drunner.cfg.vocab_size} != "
+                    f"target vocab_size={runner.cfg.vocab_size}")
+            self.dpools = self.drunner.init_paged_pools(n_pages,
+                                                        cfg.page_size)
+        else:
+            self.drunner = self.dparams = self.dpools = None
+
         self.prefill_traces = 0
         self.decode_traces = 0
-        raw_dec = runner.make_paged_decode_step(cfg.page_size)
-        raw_pre = runner.make_paged_prefill(cfg.page_size)
+        self.draft_traces = 0
+        self.verify_traces = 0
+        self.spec_proposed = 0        # drafted tokens offered to verify
+        self.spec_accepted = 0        # drafted tokens accepted
+        # the engine always runs the *sampled* step variants — knobs are
+        # (B,) data, temperature 0 is bitwise greedy, so one compiled
+        # step serves greedy and stochastic slots alike
+        raw_dec = runner.make_paged_decode_step(cfg.page_size, sample=True)
+        raw_pre = runner.make_paged_prefill(cfg.page_size, sample=True)
 
-        def dec_fn(params, pools, tok, pos, table, active):
+        def dec_fn(params, pools, tok, pos, table, active, seeds, temp,
+                   top_p, top_k):
             self.decode_traces += 1        # runs at trace time
-            return raw_dec(params, pools, tok, pos, table, active)
+            return raw_dec(params, pools, tok, pos, table, active, seeds,
+                           temp, top_p, top_k)
 
-        def pre_fn(params, pools, tokens, base, n_valid, table_row):
-            self.prefill_traces += 1       # runs at trace time
-            return raw_pre(params, pools, tokens, base, n_valid, table_row)
+        donate = cfg.donate
+        self._decode = jax.jit(dec_fn, donate_argnums=(1,) if donate else ())
 
-        donate = (1,) if cfg.donate else ()
-        self._decode = jax.jit(dec_fn, donate_argnums=donate)
-        self._prefill = jax.jit(pre_fn, donate_argnums=donate)
+        if self.spec:
+            # fused prefill: one jitted step writes the chunk into BOTH
+            # the target and drafter pools, preserving the "exactly one
+            # prefill compile" contract in spec mode.  The drafter leg
+            # is the plain (unsampled) prefill — only its KV writes
+            # matter; its next-token output is discarded.
+            raw_dpre = self.drunner.make_paged_prefill(cfg.page_size)
+
+            def pre_fn(params, dparams, pools, dpools, tokens, base,
+                       n_valid, table_row, seed, temp, top_p, top_k):
+                self.prefill_traces += 1   # runs at trace time
+                nxt, pools = raw_pre(params, pools, tokens, base, n_valid,
+                                     table_row, seed, temp, top_p, top_k)
+                _, dpools = raw_dpre(dparams, dpools, tokens, base,
+                                     n_valid, table_row)
+                return nxt, pools, dpools
+
+            self._prefill = jax.jit(
+                pre_fn, donate_argnums=(2, 3) if donate else ())
+
+            raw_draft = self.drunner.make_paged_draft_propose(
+                cfg.page_size, cfg.spec_k)
+            raw_verify = runner.make_paged_verify_step(
+                cfg.page_size, cfg.spec_k)
+
+            def draft_fn(dparams, dpools, tok, pos0, table, active, seeds,
+                         temp, top_p, top_k):
+                self.draft_traces += 1     # runs at trace time
+                return raw_draft(dparams, dpools, tok, pos0, table, active,
+                                 seeds, temp, top_p, top_k)
+
+            def verify_fn(params, pools, tokens, pos0, table, active,
+                          dprobs, seeds, temp, top_p, top_k):
+                self.verify_traces += 1    # runs at trace time
+                return raw_verify(params, pools, tokens, pos0, table,
+                                  active, dprobs, seeds, temp, top_p, top_k)
+
+            self._draft = jax.jit(
+                draft_fn, donate_argnums=(1,) if donate else ())
+            self._verify = jax.jit(
+                verify_fn, donate_argnums=(1,) if donate else ())
+        else:
+            def pre_fn(params, pools, tokens, base, n_valid, table_row,
+                       seed, temp, top_p, top_k):
+                self.prefill_traces += 1   # runs at trace time
+                return raw_pre(params, pools, tokens, base, n_valid,
+                               table_row, seed, temp, top_p, top_k)
+
+            self._prefill = jax.jit(
+                pre_fn, donate_argnums=(1,) if donate else ())
 
         # host-side slot state (device copies are cut fresh every call —
         # same shapes/dtypes, so never a recompile)
@@ -173,6 +296,12 @@ class OnlineEngine:
         self.tok = np.zeros((S,), np.int32)
         self.slot_seq = np.zeros((S,), np.int64)   # admission counter
         self._seq = 0
+        # per-slot sampling knobs — DATA to the jitted steps, so mixing
+        # greedy and stochastic requests in one batch never recompiles
+        self.seeds = np.zeros((S,), np.int32)
+        self.temps = np.zeros((S,), np.float32)
+        self.topps = np.ones((S,), np.float32)
+        self.topks = np.zeros((S,), np.int32)
 
         self.queue: Deque[int] = deque()
         self.reqs: Dict[int, OnlineRequest] = {}
@@ -243,6 +372,18 @@ class OnlineEngine:
             self.lens[slot] = 0
             self.active[slot] = False
             self.tok[slot] = 0
+            # resolve sampling knobs: request override > engine default.
+            # The seed is a pure function of (cfg.seed, rid), so a
+            # preempted request re-derives the identical draw stream
+            cfg = self.cfg
+            self.seeds[slot] = (r.seed if r.seed is not None
+                                else (cfg.seed + rid) % (2 ** 31))
+            self.temps[slot] = (r.temperature if r.temperature is not None
+                                else cfg.temperature)
+            self.topps[slot] = (r.top_p if r.top_p is not None
+                                else cfg.top_p)
+            self.topks[slot] = (r.top_k if r.top_k is not None
+                                else cfg.top_k)
             self.admission_log.append(rid)
 
     def _clear_slot(self, slot: int):
@@ -251,6 +392,10 @@ class OnlineEngine:
         self.lens[slot] = 0
         self.active[slot] = False
         self.tok[slot] = 0
+        self.seeds[slot] = 0
+        self.temps[slot] = 0.0
+        self.topps[slot] = 1.0
+        self.topks[slot] = 0
 
     def _finish(self, slot: int, now: float):
         rid = int(self.slot_rid[slot])
@@ -317,10 +462,19 @@ class OnlineEngine:
         self.table[slot] = self.alloc.table_row(rid, self.cfg.max_pages)
         chunk = np.zeros((C,), np.int32)
         chunk[:n_valid] = r.fed[r.prefill_pos:r.prefill_pos + n_valid]
-        nxt, self.pools = self._prefill(
-            self.params, self.pools, jnp.asarray(chunk),
-            jnp.int32(r.prefill_pos), jnp.int32(n_valid),
-            jnp.asarray(self.table[slot]))
+        step_args = (jnp.asarray(chunk), jnp.int32(r.prefill_pos),
+                     jnp.int32(n_valid), jnp.asarray(self.table[slot]),
+                     jnp.int32(self.seeds[slot]),
+                     jnp.float32(self.temps[slot]),
+                     jnp.float32(self.topps[slot]),
+                     jnp.int32(self.topks[slot]))
+        if self.spec:
+            nxt, self.pools, self.dpools = self._prefill(
+                self.params, self.dparams, self.pools, self.dpools,
+                *step_args)
+        else:
+            nxt, self.pools = self._prefill(self.params, self.pools,
+                                            *step_args)
         r.prefill_pos += n_valid
         if r.prefill_pos < len(r.fed):
             return                      # more chunks to go
@@ -329,6 +483,14 @@ class OnlineEngine:
         self.lens[slot] = len(r.fed)
         self.active[slot] = True
         r.state = "decode"
+        # auto-publish a shared prefix: the first request carrying a
+        # (prefix_key, prefix_len > 0) to finish prefill registers its
+        # leading full pages; later arrivals with the same key attach
+        # them at admission and skip re-prefilling the shared tokens
+        if (r.prefix_key and r.prefix_len > 0
+                and r.prefix_key not in self.alloc.prefix_index):
+            self.alloc.register_prefix(rid, r.prefix_key,
+                                       min(r.prefix_len, len(r.prompt)))
         if not r.out:
             tok = int(jax.device_get(nxt))
             r.out.append(tok)
@@ -357,7 +519,9 @@ class OnlineEngine:
         nxt, self.pools = self._decode(
             self.params, self.pools, jnp.asarray(self.tok),
             jnp.asarray(self.lens), jnp.asarray(self.table),
-            jnp.asarray(self.active))
+            jnp.asarray(self.active), jnp.asarray(self.seeds),
+            jnp.asarray(self.temps), jnp.asarray(self.topps),
+            jnp.asarray(self.topks))
         nxt = np.asarray(jax.device_get(nxt))
         t = time.perf_counter()
         for slot in np.flatnonzero(self.active):
@@ -367,10 +531,80 @@ class OnlineEngine:
             tok = int(nxt[slot])
             r.out.append(tok)
             r.token_times.append(t)
+            r.n_decode_ticks += 1
             self.lens[slot] += 1
             self.tok[slot] = tok
             if len(r.out) >= r.max_new or tok == self.cfg.eos_id:
                 self._finish(slot, t)
+
+    # -- speculative decode (propose -> verify -> commit) ----------------------
+    def _spec_tick(self, now: float):
+        """One speculative tick over the slot batch: the drafter proposes
+        k tokens per slot (its KV advancing through its own pools), one
+        target verify pass scores all k+1 positions, and the host commits
+        `n_acc + 1` emitted tokens per slot — page-table tails rewound
+        with `PageAllocator.trim` so rejected drafts hand their surplus
+        pages straight back (LIFO: a regrow reacquires the identical
+        pages, keeping page tables deterministic)."""
+        K = self.cfg.spec_k
+        # grow every slot to hold its k+1 candidate rows, oldest first
+        for slot in sorted(np.flatnonzero(self.active),
+                           key=lambda s: self.slot_seq[s]):
+            slot = int(slot)
+            if not self.active[slot]:
+                continue                # preempted by an earlier grow
+            rid = int(self.slot_rid[slot])
+            self._make_room(rid, int(self.lens[slot]) + K + 1)
+            self.table[slot] = self.alloc.table_row(rid, self.cfg.max_pages)
+        if not self.active.any():
+            return
+        sample_args = (jnp.asarray(self.seeds), jnp.asarray(self.temps),
+                       jnp.asarray(self.topps), jnp.asarray(self.topks))
+        table = jnp.asarray(self.table)
+        active = jnp.asarray(self.active)
+        pos0 = jnp.asarray(self.lens)
+        drafts, dprobs, self.dpools = self._draft(
+            self.dparams, self.dpools, jnp.asarray(self.tok), pos0,
+            table, active, *sample_args)
+        tokens = jnp.concatenate(
+            [jnp.asarray(self.tok)[:, None], drafts.astype(jnp.int32)],
+            axis=1)                     # (B, k+1): pending token + drafts
+        n_acc, out, self.pools = self._verify(
+            self.params, self.pools, tokens, pos0, table, active, dprobs,
+            *sample_args)
+        n_acc = np.asarray(jax.device_get(n_acc))
+        out = np.asarray(jax.device_get(out))
+        t = time.perf_counter()
+        for slot in np.flatnonzero(self.active):
+            slot = int(slot)
+            rid = int(self.slot_rid[slot])
+            r = self.reqs[rid]
+            na = int(n_acc[slot])
+            self.spec_proposed += K
+            self.spec_accepted += na
+            r.n_decode_ticks += 1
+            # emit the accepted drafts + the bonus/residual token, cut
+            # short by max_new / eos exactly like the plain decode path
+            done = False
+            kept = 0
+            for tok in out[slot, :na + 1]:
+                tok = int(tok)
+                r.out.append(tok)
+                r.token_times.append(t)
+                kept += 1
+                if len(r.out) >= r.max_new or tok == self.cfg.eos_id:
+                    done = True
+                    break
+            if done:
+                self._finish(slot, t)
+                continue
+            # commit: the pending token + na accepted drafts are now
+            # written KV (kept == na + 1 rows starting at the old len);
+            # the new pending token's KV lands next tick
+            self.lens[slot] += kept
+            self.tok[slot] = r.out[-1]
+            self.alloc.trim(rid, int(self.lens[slot]))
+            self.table[slot] = self.alloc.table_row(rid, self.cfg.max_pages)
 
     def pop_done(self) -> List[OnlineRequest]:
         """Remove and return finished requests.  The engine retains
@@ -390,12 +624,15 @@ class OnlineEngine:
 
     def tick(self, now: Optional[float] = None):
         """One engine step: admission -> one prefill chunk -> one decode
-        tick over the slot batch."""
+        (or speculative propose/verify/commit) tick over the slot batch."""
         now = time.perf_counter() if now is None else now
         self.ticks += 1
         self._admit(now)
         self._prefill_tick(now)
-        self._decode_tick(now)
+        if self.spec:
+            self._spec_tick(now)
+        else:
+            self._decode_tick(now)
 
     def run(self, max_ticks: int = 100_000):
         """Drive ticks until every submitted request is done."""
@@ -419,8 +656,9 @@ def _pctl(xs: Sequence[float], q: float) -> float:
 
 def run_poisson_load(engine: OnlineEngine, *, rate: float, n_requests: int,
                      prompt_len: int, max_new: int, vocab_size: int,
-                     seed: int = 0, max_ticks: int = 1_000_000
-                     ) -> Dict[str, Any]:
+                     seed: int = 0, max_ticks: int = 1_000_000,
+                     shared_prefix_len: int = 0,
+                     prefix_key: Optional[str] = None) -> Dict[str, Any]:
     """Open-loop Poisson arrivals at `rate` req/s against a live engine.
 
     Requests are submitted when their scheduled arrival time passes on
@@ -428,14 +666,31 @@ def run_poisson_load(engine: OnlineEngine, *, rate: float, n_requests: int,
     the running batch), so TTFT includes genuine queueing delay.
     Returns TTFT p50/p99, pooled inter-token latency p50/p99, sustained
     tok/s, and churn counters.
+
+    With ``shared_prefix_len > 0`` every prompt starts with the same
+    `shared_prefix_len`-token system prompt followed by a random suffix
+    (the chat-serving hot-prefix shape): the first request to finish
+    prefill publishes the shared pages under `prefix_key`, later arrivals
+    attach them and skip re-prefilling — the report's `prefix_hits` /
+    `prefix_hit_rate` count how many did.  The published prefix is
+    dropped before returning so repeated loads on one engine start cold.
     """
     rs = np.random.RandomState(seed)
     gaps = rs.exponential(1.0 / rate, size=n_requests)
     arrivals = np.cumsum(gaps)
-    prompts = [rs.randint(0, vocab_size, prompt_len).astype(np.int32)
-               for _ in range(n_requests)]
+    shared_prefix_len = min(shared_prefix_len, prompt_len)
+    if shared_prefix_len > 0 and prefix_key is None:
+        prefix_key = f"poisson-load-{seed}"
+    shared = rs.randint(0, vocab_size, shared_prefix_len).astype(np.int32)
+    prompts = [np.concatenate([
+        shared,
+        rs.randint(0, vocab_size,
+                   prompt_len - shared_prefix_len).astype(np.int32)])
+        for _ in range(n_requests)]
     base = (max(engine.reqs) + 1) if engine.reqs else 0   # engine reuse
     ticks0, preempts0 = engine.ticks, engine.n_preemptions
+    hits0 = engine.alloc.stats["prefix_hits"]
+    proposed0, accepted0 = engine.spec_proposed, engine.spec_accepted
     t0 = time.perf_counter()
     submitted = 0
     budget = max_ticks
@@ -449,6 +704,9 @@ def run_poisson_load(engine: OnlineEngine, *, rate: float, n_requests: int,
                and arrivals[submitted] <= now - t0):
             r = OnlineRequest(rid=base + submitted,
                               prompt=prompts[submitted], max_new=max_new,
+                              prefix_key=(prefix_key if shared_prefix_len
+                                          else None),
+                              prefix_len=shared_prefix_len,
                               arrival_t=t0 + arrivals[submitted])
             engine.submit(r)
             submitted += 1
@@ -461,11 +719,20 @@ def run_poisson_load(engine: OnlineEngine, *, rate: float, n_requests: int,
     reqs = [engine.reqs[base + i] for i in range(n_requests)]
     assert all(r.done for r in reqs)
     engine.pop_done()              # keep the engine bounded across loads
+    if prefix_key is not None and prefix_key in engine.alloc.prefix_index:
+        engine.alloc.drop_prefix(prefix_key)
     ttft = [r.first_token_t - r.arrival_t for r in reqs]
     itl: List[float] = []
     for r in reqs:
         itl.extend(b - a for a, b in zip(r.token_times, r.token_times[1:]))
     n_tokens = sum(len(r.out) for r in reqs)
+    # decode economics: the first token rides prefill, every later token
+    # rides a decode/spec tick — speculative acceptance pushes
+    # ticks-per-token below 1
+    decode_ticks = sum(r.n_decode_ticks for r in reqs)
+    decoded = sum(max(len(r.out) - 1, 0) for r in reqs)
+    proposed = engine.spec_proposed - proposed0
+    accepted = engine.spec_accepted - accepted0
     return {
         "rate_req_s": rate,
         "n_requests": n_requests,
@@ -482,5 +749,14 @@ def run_poisson_load(engine: OnlineEngine, *, rate: float, n_requests: int,
         "preemptions": engine.n_preemptions - preempts0,
         "prefill_compiles": engine.prefill_traces,
         "decode_compiles": engine.decode_traces,
+        "draft_compiles": engine.draft_traces,
+        "verify_compiles": engine.verify_traces,
+        "shared_prefix_len": shared_prefix_len,
+        "prefix_hits": engine.alloc.stats["prefix_hits"] - hits0,
+        "prefix_hit_rate": (engine.alloc.stats["prefix_hits"] - hits0)
+        / max(n_requests, 1),
+        "spec_k": engine.cfg.spec_k,
+        "acceptance_rate": accepted / max(proposed, 1),
+        "decode_ticks_per_token": decode_ticks / max(decoded, 1),
         "allocator": dict(engine.alloc.stats),
     }

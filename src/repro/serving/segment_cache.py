@@ -181,6 +181,26 @@ class SegmentCache:
         req.used += 1
         return slot
 
+    def write_tokens(self, rid: int, n: int) -> Optional[List[int]]:
+        """Multi-token advance (speculative decode commits n accepted
+        tokens at once): reserve the next n rows atomically; None if the
+        request must wait (nothing reserved on failure)."""
+        req = self.requests[rid]
+        if not self.ensure_capacity(rid, req.used + n):
+            return None
+        rows = [req.slot(req.used + i) for i in range(n)]
+        req.used += n
+        return rows
+
+    def rewind(self, rid: int, n: int):
+        """Multi-token rewind (rejected speculative drafts): forget the
+        last n written rows.  Rows written beyond a shared prefix only —
+        a consumer never writes into refcounted shared segments, so the
+        floor is the shared capacity it attached at admission."""
+        req = self.requests[rid]
+        floor = sum(s.length for s in req.segments if s.refcount > 1)
+        req.used = max(req.used - n, floor, req.prompt_len)
+
     # -- preemption ----------------------------------------------------------
     def preempt(self, rid: int) -> List[int]:
         """Evict a live request mid-generation (pool pressure): frees its
@@ -277,7 +297,7 @@ class PageAllocator:
         self.shared_len: Dict[int, int] = {}          # rid -> prefix tokens
         self.prefix_index: Dict[str, List[int]] = {}
         self.stats = {"allocs": 0, "frees": 0, "prefix_hits": 0,
-                      "preempts": 0, "alloc_failures": 0}
+                      "preempts": 0, "alloc_failures": 0, "trims": 0}
 
     # -- queries --------------------------------------------------------------
     @property
@@ -354,7 +374,30 @@ class PageAllocator:
             self.stats["allocs"] += 1
         return True
 
-    # -- release / preemption -------------------------------------------------
+    def trim(self, rid: int, n_tokens: int):
+        """Rewind the page-table tail to exactly the pages n_tokens need
+        (speculative decode: the verify pass grows a slot by k+1
+        positions up front; rejected drafts hand the surplus pages
+        back).  Tail pages pop back onto the LIFO free list in reverse,
+        so an immediate regrow of the same slot reacquires the identical
+        pages in the identical order — page-table determinism (and with
+        it the compile-count/parity contracts) survives reject/regrow
+        churn.  Never trims below the shared-prefix pages, and never
+        reclaims a page something else still references (a published
+        prefix tail)."""
+        keep = -(-n_tokens // self.page_size)
+        keep = max(keep, self.shared_len[rid] // self.page_size)
+        pages = self.pages[rid]
+        while len(pages) > keep:
+            p = pages[-1]
+            if self.refcount[p] > 1:
+                break                    # published page: leave it bound
+            pages.pop()
+            del self.refcount[p]
+            self.free_list.append(p)
+            self.stats["frees"] += 1
+            self.stats["trims"] += 1
+
     def release(self, rid: int):
         """Free a finished request's pages (shared prefix pages survive
         while other holders — or the prefix index — still reference

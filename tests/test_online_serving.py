@@ -194,12 +194,30 @@ _TP2_SCRIPT = textwrap.dedent("""
     eng = OnlineEngine(runner, params,
                        OnlineConfig(max_slots=B, max_context=S,
                                     page_size=8, prefill_chunk=4))
-    eng.submit_many([OnlineRequest(rid=i, prompt=prompts[i], max_new=NEW)
+    # explicit temperature=0.0 must ride the sampled step and still be
+    # bitwise greedy on the tp=2 EP path
+    eng.submit_many([OnlineRequest(rid=i, prompt=prompts[i], max_new=NEW,
+                                   temperature=0.0, seed=i)
                      for i in range(B)])
     eng.run(max_ticks=500)
     out = np.stack([np.asarray(eng.reqs[i].out) for i in range(B)])
     np.testing.assert_array_equal(out, ref)
     assert eng.prefill_traces == 1 and eng.decode_traces == 1
+
+    # speculative decoding on tp=2: the B*(k+1)-token verify batch rides
+    # the same EP dispatch; greedy spec output stays token-exact
+    from repro.serving.draft import SelfDrafter
+    seng = OnlineEngine(runner, params,
+                        OnlineConfig(max_slots=B, max_context=S,
+                                     page_size=8, prefill_chunk=4,
+                                     spec_k=2),
+                        drafter=SelfDrafter(draft_layers=1))
+    seng.submit_many([OnlineRequest(rid=i, prompt=prompts[i], max_new=NEW)
+                      for i in range(B)])
+    seng.run(max_ticks=500)
+    sout = np.stack([np.asarray(seng.reqs[i].out) for i in range(B)])
+    np.testing.assert_array_equal(sout, ref)
+    assert seng.draft_traces == 1 and seng.verify_traces == 1
 
     # EP decode-batch constraint: max_slots % tp != 0 must be rejected
     try:
