@@ -27,16 +27,16 @@ eng = OnlineEngine(runner, params,
 
 rs = np.random.RandomState(0)
 sys_prompt = rs.randint(0, cfg.vocab_size, 16).astype(np.int32)
-reqs = [OnlineRequest(rid=i, prompt=sys_prompt, max_new=16,
-                      prefix_key="system-prompt" if i else None)
+reqs = [OnlineRequest(rid=i, prompt=sys_prompt, max_new=16)
         for i in range(10)]
 
-# first request prefills the shared system prompt, then publishes its two
-# full pages; every later arrival skips re-prefilling those 16 tokens
+# no prefix keys anywhere: the first request's prefill publishes the
+# shared system prompt's two full pages into the content-addressed radix
+# cache; every later arrival attaches them and skips re-prefilling the
+# 16 tokens (watch `prefix_hits` / `radix_hit_tokens` below)
 eng.submit(reqs[0])
 while reqs[0].state != "decode":
     eng.tick()
-eng.register_prefix(0, "system-prompt", len(sys_prompt))
 
 for r in reqs[1:4]:
     eng.submit(r)
@@ -54,3 +54,4 @@ print(f"requests={len(reqs)}  ticks={eng.ticks}  "
       f"compiles=prefill:{eng.prefill_traces}+decode:{eng.decode_traces}")
 print(f"allocator: {eng.alloc.stats}")
 assert eng.prefill_traces == 1 and eng.decode_traces == 1
+assert eng.alloc.stats["prefix_hits"] >= 9   # every follower attached

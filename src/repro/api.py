@@ -579,7 +579,10 @@ def paged_cache_specs(cfg, env: AxisEnv):
 
     Pool layout per layer: (n_pages, page_size, KV, hd) with the page_size
     dim sharded over tp (each rank stores ps_loc = page_size/tp offsets of
-    every page); uniform archs carry a leading layer dim."""
+    every page); uniform archs carry a leading layer dim.  Pages are
+    slot-agnostic and may be referenced by several page tables at once —
+    refcounted prefix sharing and the cross-request radix cache retain a
+    page across requests; the pools themselves never change shape for it."""
     lead = 1 if (cfg.uniform_blocks and not cfg.is_encoder_decoder) else 0
     one = {"self": {"k": P(*([None] * lead), None, env.tp_axis, None, None),
                     "v": P(*([None] * lead), None, env.tp_axis, None,

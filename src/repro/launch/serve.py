@@ -107,18 +107,37 @@ def make_drafter(cfg, args):
     return SelfDrafter(draft_layers=args.draft_layers)
 
 
+def parse_tenant_budgets(spec):
+    """'alice:128,bob:64' -> {'alice': 128, 'bob': 64} (None passes
+    through)."""
+    if not spec:
+        return None
+    out = {}
+    for part in spec.split(","):
+        name, _, tokens = part.partition(":")
+        if not name or not tokens:
+            raise ValueError(f"--tenant-budgets entry {part!r} is not "
+                             f"name:tokens")
+        out[name] = int(tokens)
+    return out
+
+
 def run_online(cfg, mesh, flags, args) -> None:
     """Online continuous batching under a Poisson load at each rate."""
     runner = api.Runner(cfg, mesh, fsdp=False, seq_parallel=False,
                         max_seq=args.seq, flags=flags)
     params = runner.init_params(0)
+    budgets = parse_tenant_budgets(args.tenant_budgets)
     ocfg = OnlineConfig(
         max_slots=quantize_microbatch(args.slots, args.tp),
         max_context=args.seq, page_size=args.page_size,
         n_pages=args.pages,
         prefill_chunk=quantize_microbatch(args.prefill_chunk, args.tp),
         temperature=args.temperature, top_p=args.top_p, top_k=args.top_k,
-        seed=args.seed, spec_k=args.spec_k)
+        seed=args.seed, spec_k=args.spec_k,
+        radix_cache=not args.no_radix_cache, policy=args.policy,
+        max_queue=args.max_queue, overload=args.overload,
+        tenant_budgets=budgets)
     eng = OnlineEngine(runner, params, ocfg, drafter=make_drafter(cfg, args))
     # one engine serves every rate (the pool drains between loads); a
     # small warm-up load eats the XLA compiles so the reported
@@ -126,21 +145,23 @@ def run_online(cfg, mesh, flags, args) -> None:
     run_poisson_load(eng, rate=100.0, n_requests=2,
                      prompt_len=args.prompt_len, max_new=2,
                      vocab_size=cfg.vocab_size, seed=7)
+    tenants = list(budgets) if budgets else None
     cases = []
     for rate in (float(r) for r in args.rates.split(",")):
         rep = run_poisson_load(eng, rate=rate, n_requests=args.requests,
                                prompt_len=args.prompt_len,
                                max_new=args.max_new,
                                vocab_size=cfg.vocab_size,
-                               shared_prefix_len=args.shared_prefix_len)
+                               shared_prefix_len=args.shared_prefix_len,
+                               tenants=tenants)
         print(f"[online] rate={rate:g}/s tok/s={rep['tok_s']:.1f} "
               f"ttft p50/p99={rep['ttft_p50_ms']:.0f}/"
               f"{rep['ttft_p99_ms']:.0f}ms itl p50/p99="
               f"{rep['itl_p50_ms']:.1f}/{rep['itl_p99_ms']:.1f}ms "
-              f"preempts={rep['preemptions']} "
+              f"preempts={rep['preemptions']} shed={rep['shed']} "
               f"acc={rep['acceptance_rate']:.2f} "
               f"ticks/tok={rep['decode_ticks_per_token']:.2f} "
-              f"prefix_hits={rep['prefix_hits']}")
+              f"prefix_hit_rate={rep['prefix_hit_rate']:.2f}")
         cases.append(rep)
     out = {
         "bench": "online continuous-batching serving (paged KV)",
@@ -156,6 +177,9 @@ def run_online(cfg, mesh, flags, args) -> None:
                    "temperature": ocfg.temperature, "top_p": ocfg.top_p,
                    "top_k": ocfg.top_k, "spec_k": ocfg.spec_k,
                    "drafter": (eng.drafter.name if eng.drafter else None),
+                   "radix_cache": ocfg.radix_cache, "policy": ocfg.policy,
+                   "max_queue": ocfg.max_queue, "overload": ocfg.overload,
+                   "tenant_budgets": budgets,
                    "tp": args.tp, "moe_dispatch": args.moe_dispatch},
         "note": ("interpret-mode CPU wall clock - scheduling/latency "
                  "shape, NOT TPU performance"),
@@ -215,6 +239,28 @@ def main():
                     help="online: tokens of shared system prompt per "
                          "request (hot-prefix workload; 0 = disjoint "
                          "prompts)")
+    ap.add_argument("--policy", default="fcfs",
+                    choices=["fcfs", "decode-priority", "prefill-priority"],
+                    help="online: tick-ordering policy (decode-priority "
+                         "never preempts decoders for arriving prompts; "
+                         "prefill-priority drains all prefill chunks "
+                         "before decoding to bound head-of-queue TTFT)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="online: bound the arrival queue (saturation "
+                         "gate; default unbounded)")
+    ap.add_argument("--overload", default="defer",
+                    choices=["defer", "shed"],
+                    help="online: full-queue response — 'defer' makes the "
+                         "loadgen retry later, 'shed' drops the request "
+                         "(counted in the report)")
+    ap.add_argument("--no-radix-cache", action="store_true",
+                    help="online: disable the content-addressed radix "
+                         "prefix cache (on by default; token streams are "
+                         "identical either way)")
+    ap.add_argument("--tenant-budgets", default=None,
+                    help="online: per-tenant admitted-token caps as "
+                         "'name:tokens,name:tokens'; the loadgen round-"
+                         "robins requests over the named tenants")
     ap.add_argument("--report", default="BENCH_serve_online.json",
                     help="online: where the load report JSON lands")
     ap.add_argument("--tp", type=int, default=1,

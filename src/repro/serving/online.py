@@ -30,7 +30,25 @@ tokens out — built from three pieces:
     request requeued at the arrival-queue head) and re-prefills its
     prompt *plus* its already-emitted tokens on re-admission — emitted
     tokens are never re-sampled, so preemption is invisible in the
-    output stream.
+    output stream.  A **policy layer** rides on top: `OnlineConfig.
+    policy` picks the tick ordering ("fcfs" | "decode-priority" |
+    "prefill-priority" — see `tick`), `max_queue` + `overload` form a
+    saturation-aware admission gate (bounded queue, shed-or-defer), and
+    `tenant_budgets` caps each tenant's admitted tokens.  All of it is
+    host bookkeeping over the same compiled steps — switching policies
+    never recompiles.
+
+  * **The radix prefix cache** (`radix_cache=True`, the default).
+    `PageAllocator` keeps a trie keyed by page-aligned token blocks:
+    admission walks it with the request's exact prefill tokens and
+    attaches every matching refcounted KV page automatically — repeated
+    system prompts cost zero prefill with no caller-supplied
+    `prefix_key`.  Full pages publish into the trie when prefill
+    completes, when a request releases, and when it is preempted;
+    unreferenced cached pages are LRU-evicted (leaf-first) only when an
+    allocation would otherwise fail, so caching never causes an OOM an
+    uncached run would not hit.  Cache on/off is bitwise-invisible in
+    the token streams (greedy and seeded sampling alike).
 
 The per-slot decode batch shares every MoE decode constraint with the
 offline engine: `max_slots` and `prefill_chunk` must satisfy
@@ -77,6 +95,10 @@ from repro.serving.flood import quantize_microbatch
 from repro.serving.segment_cache import PageAllocator
 
 
+POLICIES = ("fcfs", "decode-priority", "prefill-priority")
+OVERLOAD = ("defer", "shed")
+
+
 @dataclasses.dataclass
 class OnlineConfig:
     """Engine geometry + default sampling/speculation knobs.
@@ -89,7 +111,19 @@ class OnlineConfig:
     speculative decoding (propose->verify->commit ticks) and requires a
     drafter at engine construction; the page-table width then carries
     `spec_k` extra positions of slack because the verify pass writes
-    k+1 candidate KV rows before the host commits."""
+    k+1 candidate KV rows before the host commits.
+
+    `radix_cache` turns on the cross-request content-addressed prefix
+    cache (docs/serving.md): matching KV pages attach at admission with
+    no caller-supplied `prefix_key`, full pages publish into the trie on
+    prefill completion / release / preemption, and unreferenced cached
+    pages LRU-evict only when an allocation would otherwise fail.  The
+    scheduler knobs are pure host data — `policy` picks the tick
+    ordering ("fcfs" | "decode-priority" | "prefill-priority"),
+    `max_queue` bounds the arrival queue (`overload` picks shed vs defer
+    when it is full), and `tenant_budgets` caps each tenant's admitted
+    prompt+max_new tokens — none of them change any jitted step shape,
+    so switching policies at runtime never recompiles."""
     max_slots: int
     max_context: int
     page_size: int = 16
@@ -104,6 +138,13 @@ class OnlineConfig:
     seed: int = 0          # request seed defaults to (seed + rid) % 2**31
     # speculative decoding
     spec_k: int = 0
+    # cross-request radix prefix cache
+    radix_cache: bool = True
+    # scheduler policy layer
+    policy: str = "fcfs"
+    max_queue: Optional[int] = None     # bounded arrival queue (None = inf)
+    overload: str = "defer"             # queue-full response: defer | shed
+    tenant_budgets: Optional[Dict[str, int]] = None
 
     @property
     def max_pages(self) -> int:
@@ -122,6 +163,7 @@ class OnlineRequest:
     max_new: int
     prefix_key: Optional[str] = None
     prefix_len: int = 0              # tokens to auto-publish under prefix_key
+    tenant: Optional[str] = None     # admission-budget accounting key
     arrival_t: float = 0.0
     # sampling overrides (None -> the OnlineConfig default); the seed is
     # fixed per request, so preemption replay re-derives identical draws
@@ -130,7 +172,7 @@ class OnlineRequest:
     top_k: Optional[int] = None
     seed: Optional[int] = None
     out: List[int] = dataclasses.field(default_factory=list)
-    state: str = "queued"            # queued | prefill | decode | done
+    state: str = "queued"        # queued | prefill | decode | done | shed
     admit_t: Optional[float] = None
     first_token_t: Optional[float] = None
     finish_t: Optional[float] = None
@@ -182,6 +224,12 @@ class OnlineEngine:
                 f"pool of {n_pages} pages (1 reserved) cannot hold even "
                 f"one max_context={cfg.max_context} request "
                 f"({cfg.max_pages} pages)")
+        if cfg.policy not in POLICIES:
+            raise ValueError(f"policy={cfg.policy!r} not in {POLICIES}")
+        if cfg.overload not in OVERLOAD:
+            raise ValueError(f"overload={cfg.overload!r} not in {OVERLOAD}")
+        if cfg.max_queue is not None and cfg.max_queue < 1:
+            raise ValueError(f"max_queue={cfg.max_queue} must be >= 1")
         self.cfg = cfg
         self.runner = runner
         self.params = params
@@ -308,9 +356,25 @@ class OnlineEngine:
         self.admission_log: List[int] = []
         self.ticks = 0
         self.n_preemptions = 0
+        self.policy = cfg.policy
+        self.n_shed = 0                  # saturation-gate rejections
+        self.n_budget_skips = 0          # admissions deferred over budget
+
+    def set_policy(self, policy: str):
+        """Switch the tick-ordering policy at runtime.  Pure host state —
+        the jitted steps are untouched, so this never recompiles (the
+        policy tests assert it)."""
+        if policy not in POLICIES:
+            raise ValueError(f"policy={policy!r} not in {POLICIES}")
+        self.policy = policy
 
     # -- submission -----------------------------------------------------------
-    def submit(self, req: OnlineRequest):
+    def submit(self, req: OnlineRequest) -> bool:
+        """Enqueue a request.  With a bounded queue (`max_queue`) a full
+        queue triggers the saturation gate: "shed" marks the request
+        shed and drops it (state="shed", counted in `n_shed`), "defer"
+        returns False without touching it so the caller can retry after
+        the engine drains.  Returns True when enqueued."""
         total = len(req.prompt) + req.max_new
         if total > self.cfg.max_context:
             raise ValueError(f"request {req.rid}: prompt+max_new={total} "
@@ -324,12 +388,24 @@ class OnlineEngine:
             raise ValueError(f"rid {req.rid} is still in flight "
                              f"(state={old.state}); rids must be unique "
                              f"among live requests")
+        if (self.cfg.max_queue is not None
+                and len(self.queue) >= self.cfg.max_queue):
+            if self.cfg.overload == "shed":
+                req.state = "shed"
+                self.n_shed += 1
+            return False
         self.reqs[req.rid] = req
         self.queue.append(req.rid)
+        return True
 
     def submit_many(self, reqs: Sequence[OnlineRequest]):
         for r in reqs:
-            self.submit(r)
+            if not self.submit(r):
+                raise RuntimeError(
+                    f"rid {r.rid} rejected by the saturation gate "
+                    f"(queue full at max_queue={self.cfg.max_queue}); "
+                    f"submit_many is for unbounded batches — use submit "
+                    f"and handle the False return")
 
     def register_prefix(self, rid: int, key: str, n_tokens: int):
         """Publish a live request's leading full pages for prefix reuse;
@@ -345,23 +421,61 @@ class OnlineEngine:
     def _busy_slots(self) -> List[int]:
         return [int(s) for s in np.flatnonzero(self.slot_rid >= 0)]
 
+    def _tenant_usage(self) -> Dict[str, int]:
+        usage: Dict[str, int] = {}
+        for s in self._busy_slots():
+            r = self.reqs[int(self.slot_rid[s])]
+            if r.tenant is not None:
+                usage[r.tenant] = (usage.get(r.tenant, 0)
+                                   + len(r.prompt) + r.max_new)
+        return usage
+
     def _admit(self, now: float):
+        budgets = self.cfg.tenant_budgets or {}
+        usage = self._tenant_usage() if budgets else {}
+        skipped: List[int] = []
         for slot in self._free_slots():
-            if not self.queue:
+            rid = None
+            while self.queue:
+                cand = self.queue.popleft()
+                c = self.reqs[cand]
+                budget = (budgets.get(c.tenant)
+                          if c.tenant is not None else None)
+                cost = len(c.prompt) + c.max_new
+                if (budget is not None
+                        and usage.get(c.tenant, 0) + cost > budget):
+                    # over the tenant's admitted-token budget: hold it
+                    # back (FCFS order preserved) and try the next rid
+                    skipped.append(cand)
+                    self.n_budget_skips += 1
+                    continue
+                rid = cand
                 break
-            rid = self.queue.popleft()
+            if rid is None:
+                break
             r = self.reqs[rid]
-            # cap prefix attachment at the request's ORIGINAL prompt:
-            # generated tokens diverge from the publisher's continuation,
-            # and shared pages must never receive this request's writes
-            shared = self.alloc.admit(rid, prefix_key=r.prefix_key,
-                                      prompt_len=len(r.prompt))
+            if r.tenant is not None and budgets:
+                usage[r.tenant] = (usage.get(r.tenant, 0)
+                                   + len(r.prompt) + r.max_new)
             # re-prefill prompt + already-emitted tokens minus the last,
             # which becomes the next decode input (never re-sampled)
             r.fed = (np.concatenate([r.prompt,
                                      np.asarray(r.out[:-1], np.int32)])
                      if r.out else np.asarray(r.prompt, np.int32)
                      ).astype(np.int32)
+            if self.cfg.radix_cache:
+                # content-addressed attach: walk the radix trie with the
+                # exact tokens this request will prefill (on re-admission
+                # after a preempt that includes its own emitted tokens,
+                # so a published victim re-attaches nearly everything)
+                shared = self.alloc.admit(rid, tokens=r.fed)
+            else:
+                # legacy keyed attach, capped at the request's ORIGINAL
+                # prompt: generated tokens diverge from the publisher's
+                # continuation, and shared pages must never receive this
+                # request's writes
+                shared = self.alloc.admit(rid, prefix_key=r.prefix_key,
+                                          prompt_len=len(r.prompt))
             r.prefill_pos = min(shared, max(len(r.fed) - 1, 0))
             r.state = "prefill"
             r.admit_t = now
@@ -385,6 +499,9 @@ class OnlineEngine:
             self.topks[slot] = (r.top_k if r.top_k is not None
                                 else cfg.top_k)
             self.admission_log.append(rid)
+        # over-budget holds return to the queue head in FCFS order
+        for cand in reversed(skipped):
+            self.queue.appendleft(cand)
 
     def _clear_slot(self, slot: int):
         self.slot_rid[slot] = -1
@@ -397,10 +514,29 @@ class OnlineEngine:
         self.topps[slot] = 1.0
         self.topks[slot] = 0
 
+    def _written_tokens(self, slot: int) -> np.ndarray:
+        """The token each written KV row holds, in row order — the
+        invariant `row i holds KV of (prompt + out)[i]` is maintained by
+        prefill (feeds prompt + out[:-1]), decode (feeds out[-1] at row
+        `lens`), and spec commit (lens grows only over accepted rows).
+        During prefill only `prefill_pos` rows are written."""
+        rid = int(self.slot_rid[slot])
+        r = self.reqs[rid]
+        written = (r.prefill_pos if r.state == "prefill"
+                   else int(self.lens[slot]))
+        seq = (np.concatenate([r.prompt, np.asarray(r.out, np.int32)])
+               if r.out else np.asarray(r.prompt, np.int32))
+        return seq[:written].astype(np.int32)
+
     def _finish(self, slot: int, now: float):
         rid = int(self.slot_rid[slot])
         r = self.reqs[rid]
-        self.alloc.release(rid)
+        if self.cfg.radix_cache:
+            # publish-on-release: the request's full pages (prompt AND
+            # generated tokens) enter the trie instead of recycling
+            self.alloc.release(rid, tokens=self._written_tokens(slot))
+        else:
+            self.alloc.release(rid)
         r.state = "done"
         r.finish_t = now
         r.fed = None
@@ -409,10 +545,15 @@ class OnlineEngine:
     def _preempt_slot(self, slot: int):
         """Free a victim's pages and requeue it at the queue head (FCFS
         re-admission: when several are preempted youngest-first, each
-        appendleft puts the older one ahead)."""
+        appendleft puts the older one ahead).  With the radix cache the
+        victim's full pages are published first — unless the sweep has
+        to evict them, its re-prefill collapses to a cache hit."""
         rid = int(self.slot_rid[slot])
         r = self.reqs[rid]
-        self.alloc.preempt(rid)
+        if self.cfg.radix_cache:
+            self.alloc.preempt(rid, tokens=self._written_tokens(slot))
+        else:
+            self.alloc.preempt(rid)
         r.state = "queued"
         r.n_preempted += 1
         r.fed = None
@@ -420,13 +561,18 @@ class OnlineEngine:
         self._clear_slot(slot)
         self.n_preemptions += 1
 
-    def _make_room(self, rid: int, n_tokens: int):
+    def _make_room(self, rid: int, n_tokens: int,
+                   allow_preempt: bool = True) -> bool:
         """ensure_capacity with preempt-and-requeue: evict the youngest
-        other resident until the grow fits.  Failing with no victims left
-        means this request is the sole resident and STILL cannot fit —
-        nothing will ever free (only pinned prefix pages and its own
-        remain), so raise instead of letting the scheduler thrash through
-        endless self-preemption."""
+        other resident until the grow fits (the allocator has already
+        LRU-evicted unreferenced cached pages before reporting failure —
+        eviction always precedes preemption).  Failing with no victims
+        left means this request is the sole resident and STILL cannot
+        fit — nothing will ever free (only pinned prefix pages and its
+        own remain), so raise instead of letting the scheduler thrash
+        through endless self-preemption.  With `allow_preempt=False`
+        (decode-priority prefill) a grow that would need a victim
+        returns False instead — the caller defers to a later tick."""
         while not self.alloc.ensure_capacity(rid, n_tokens):
             victims = [s for s in self._busy_slots()
                        if int(self.slot_rid[s]) != rid]
@@ -439,7 +585,10 @@ class OnlineEngine:
                     f"pool cannot satisfy it even empty: {self.alloc.n_free}"
                     f" free, {pinned} page refs pinned by registered "
                     f"prefixes (drop_prefix to release)")
+            if not allow_preempt:
+                return False
             self._preempt_slot(max(victims, key=lambda s: self.slot_seq[s]))
+        return True
 
     # -- prefill --------------------------------------------------------------
     def _prefill_target(self) -> Optional[int]:
@@ -450,15 +599,24 @@ class OnlineEngine:
             return None
         return min(cands, key=lambda s: self.slot_seq[s])
 
-    def _prefill_tick(self, now: float):
+    def _prefill_tick(self, now: float) -> bool:
+        """Run one prefill chunk for the oldest prefilling slot; returns
+        True when it made progress (False: nothing to prefill, or the
+        grow deferred under decode-priority)."""
         slot = self._prefill_target()
         if slot is None:
-            return
+            return False
         rid = int(self.slot_rid[slot])
         r = self.reqs[rid]
         C = self.cfg.prefill_chunk
         n_valid = min(C, len(r.fed) - r.prefill_pos)
-        self._make_room(rid, r.prefill_pos + n_valid)
+        # decode-priority: prefill never steals pages from in-flight
+        # decode slots — if eviction can't cover the grow, defer the
+        # chunk until decodes release naturally
+        if not self._make_room(rid, r.prefill_pos + n_valid,
+                               allow_preempt=(self.policy
+                                              != "decode-priority")):
+            return False
         self.table[slot] = self.alloc.table_row(rid, self.cfg.max_pages)
         chunk = np.zeros((C,), np.int32)
         chunk[:n_valid] = r.fed[r.prefill_pos:r.prefill_pos + n_valid]
@@ -477,18 +635,24 @@ class OnlineEngine:
                                             *step_args)
         r.prefill_pos += n_valid
         if r.prefill_pos < len(r.fed):
-            return                      # more chunks to go
+            return True                 # more chunks to go
         # prompt (+ replayed tokens) fully written: enter decode state
         t = time.perf_counter()
         self.lens[slot] = len(r.fed)
         self.active[slot] = True
         r.state = "decode"
-        # auto-publish a shared prefix: the first request carrying a
-        # (prefix_key, prefix_len > 0) to finish prefill registers its
-        # leading full pages; later arrivals with the same key attach
-        # them at admission and skip re-prefilling the shared tokens
-        if (r.prefix_key and r.prefix_len > 0
+        if self.cfg.radix_cache:
+            # publish-on-prefill: the prompt's full pages enter the trie
+            # the moment they are written, so concurrent arrivals with
+            # the same prefix hit while this request is still decoding.
+            # Content addressing dedupes same-prefix racers — no
+            # prefix_key coordination, no double-publish
+            self.alloc.publish_radix(rid, r.fed)
+        elif (r.prefix_key and r.prefix_len > 0
                 and r.prefix_key not in self.alloc.prefix_index):
+            # legacy keyed auto-publish: first finisher wins; a same-key
+            # racer's identical pages stay private (content-dedup needs
+            # the radix path) and recycle on its release
             self.alloc.register_prefix(rid, r.prefix_key,
                                        min(r.prefix_len, len(r.prompt)))
         if not r.out:
@@ -498,8 +662,9 @@ class OnlineEngine:
             r.token_times.append(t)
             if len(r.out) >= r.max_new or tok == self.cfg.eos_id:
                 self._finish(slot, t)
-                return
+                return True
         self.tok[slot] = r.out[-1]
+        return True
 
     # -- decode ---------------------------------------------------------------
     def _decode_tick(self, now: float):
@@ -623,16 +788,36 @@ class OnlineEngine:
         return not self.queue and not self._busy_slots()
 
     def tick(self, now: Optional[float] = None):
-        """One engine step: admission -> one prefill chunk -> one decode
-        (or speculative propose/verify/commit) tick over the slot batch."""
+        """One engine step under the active scheduling policy:
+
+        * ``fcfs`` — admission -> one prefill chunk -> one decode (or
+          speculative propose/verify/commit) tick.  The balanced
+          default: long prompts cost the batch one chunk per tick.
+        * ``decode-priority`` — decode first, then at most one prefill
+          chunk, and prefill growth never preempts a decoding slot
+          (it defers until decodes release pages): in-flight requests
+          are never starved or evicted by arriving prompts.
+        * ``prefill-priority`` — drain EVERY pending prefill chunk
+          before decoding, preempting decode slots for room if needed:
+          the head-of-queue request reaches its first token within one
+          tick of admission, bounding TTFT at the cost of decode ITL.
+
+        All three drive the same compiled steps — switching policies
+        never recompiles."""
         now = time.perf_counter() if now is None else now
         self.ticks += 1
         self._admit(now)
-        self._prefill_tick(now)
-        if self.spec:
-            self._spec_tick(now)
-        else:
-            self._decode_tick(now)
+        step = self._spec_tick if self.spec else self._decode_tick
+        if self.policy == "decode-priority":
+            step(now)
+            self._prefill_tick(now)
+        elif self.policy == "prefill-priority":
+            while self._prefill_tick(now):
+                pass
+            step(now)
+        else:                            # fcfs
+            self._prefill_tick(now)
+            step(now)
 
     def run(self, max_ticks: int = 100_000):
         """Drive ticks until every submitted request is done."""
@@ -658,7 +843,9 @@ def run_poisson_load(engine: OnlineEngine, *, rate: float, n_requests: int,
                      prompt_len: int, max_new: int, vocab_size: int,
                      seed: int = 0, max_ticks: int = 1_000_000,
                      shared_prefix_len: int = 0,
-                     prefix_key: Optional[str] = None) -> Dict[str, Any]:
+                     prefix_key: Optional[str] = None,
+                     tenants: Optional[Sequence[str]] = None
+                     ) -> Dict[str, Any]:
     """Open-loop Poisson arrivals at `rate` req/s against a live engine.
 
     Requests are submitted when their scheduled arrival time passes on
@@ -669,17 +856,24 @@ def run_poisson_load(engine: OnlineEngine, *, rate: float, n_requests: int,
 
     With ``shared_prefix_len > 0`` every prompt starts with the same
     `shared_prefix_len`-token system prompt followed by a random suffix
-    (the chat-serving hot-prefix shape): the first request to finish
-    prefill publishes the shared pages under `prefix_key`, later arrivals
-    attach them and skip re-prefilling — the report's `prefix_hits` /
-    `prefix_hit_rate` count how many did.  The published prefix is
-    dropped before returning so repeated loads on one engine start cold.
-    """
+    (the chat-serving hot-prefix shape).  With the radix cache on, the
+    hits need **no coordination**: the first request to finish prefill
+    publishes its full pages into the trie and later arrivals attach by
+    content — the report's `prefix_hits` / `prefix_hit_rate` count how
+    many did.  With the cache off the legacy `prefix_key` registry
+    carries the sharing instead.  The cache is flushed before returning
+    so repeated loads on one engine start cold.
+
+    A bounded-queue engine may defer (submission retried while the
+    arrival is late) or shed (request dropped, counted in `n_shed`)
+    under overload; `tenants` round-robins the given tenant names onto
+    requests so per-tenant admission budgets can be exercised."""
     rs = np.random.RandomState(seed)
     gaps = rs.exponential(1.0 / rate, size=n_requests)
     arrivals = np.cumsum(gaps)
     shared_prefix_len = min(shared_prefix_len, prompt_len)
-    if shared_prefix_len > 0 and prefix_key is None:
+    use_key = shared_prefix_len > 0 and not engine.cfg.radix_cache
+    if use_key and prefix_key is None:
         prefix_key = f"poisson-load-{seed}"
     shared = rs.randint(0, vocab_size, shared_prefix_len).astype(np.int32)
     prompts = [np.concatenate([
@@ -690,7 +884,16 @@ def run_poisson_load(engine: OnlineEngine, *, rate: float, n_requests: int,
     base = (max(engine.reqs) + 1) if engine.reqs else 0   # engine reuse
     ticks0, preempts0 = engine.ticks, engine.n_preemptions
     hits0 = engine.alloc.stats["prefix_hits"]
+    hit_tok0 = engine.alloc.stats["radix_hit_tokens"]
+    evict0 = engine.alloc.stats["evictions"]
+    shed0, budget_skips0 = engine.n_shed, engine.n_budget_skips
     proposed0, accepted0 = engine.spec_proposed, engine.spec_accepted
+    reqs = [OnlineRequest(rid=base + i, prompt=prompts[i], max_new=max_new,
+                          prefix_key=(prefix_key if use_key else None),
+                          prefix_len=(shared_prefix_len if use_key else 0),
+                          tenant=(tenants[i % len(tenants)]
+                                  if tenants else None))
+            for i in range(n_requests)]
     t0 = time.perf_counter()
     submitted = 0
     budget = max_ticks
@@ -702,35 +905,37 @@ def run_poisson_load(engine: OnlineEngine, *, rate: float, n_requests: int,
         now = time.perf_counter()
         while (submitted < n_requests
                and arrivals[submitted] <= now - t0):
-            r = OnlineRequest(rid=base + submitted,
-                              prompt=prompts[submitted], max_new=max_new,
-                              prefix_key=(prefix_key if shared_prefix_len
-                                          else None),
-                              prefix_len=shared_prefix_len,
-                              arrival_t=t0 + arrivals[submitted])
-            engine.submit(r)
-            submitted += 1
+            r = reqs[submitted]
+            r.arrival_t = t0 + arrivals[submitted]
+            if engine.submit(r):
+                submitted += 1
+            elif r.state == "shed":
+                submitted += 1           # gate dropped it; move on
+            else:
+                break                    # deferred: retry next loop
         if engine.idle and submitted < n_requests:
             time.sleep(min(arrivals[submitted] - (now - t0), 0.01))
             continue
         engine.tick(now)
     t_end = time.perf_counter()
 
-    reqs = [engine.reqs[base + i] for i in range(n_requests)]
-    assert all(r.done for r in reqs)
+    served = [r for r in reqs if r.state != "shed"]
+    n_shed = len(reqs) - len(served)
+    assert all(r.done for r in served)
     engine.pop_done()              # keep the engine bounded across loads
     if prefix_key is not None and prefix_key in engine.alloc.prefix_index:
         engine.alloc.drop_prefix(prefix_key)
-    ttft = [r.first_token_t - r.arrival_t for r in reqs]
+    engine.alloc.flush_radix()     # repeated loads start cache-cold
+    ttft = [r.first_token_t - r.arrival_t for r in served]
     itl: List[float] = []
-    for r in reqs:
+    for r in served:
         itl.extend(b - a for a, b in zip(r.token_times, r.token_times[1:]))
-    n_tokens = sum(len(r.out) for r in reqs)
+    n_tokens = sum(len(r.out) for r in served)
     # decode economics: the first token rides prefill, every later token
     # rides a decode/spec tick — speculative acceptance pushes
     # ticks-per-token below 1
-    decode_ticks = sum(r.n_decode_ticks for r in reqs)
-    decoded = sum(max(len(r.out) - 1, 0) for r in reqs)
+    decode_ticks = sum(r.n_decode_ticks for r in served)
+    decoded = sum(max(len(r.out) - 1, 0) for r in served)
     proposed = engine.spec_proposed - proposed0
     accepted = engine.spec_accepted - accepted0
     return {
@@ -738,6 +943,8 @@ def run_poisson_load(engine: OnlineEngine, *, rate: float, n_requests: int,
         "n_requests": n_requests,
         "prompt_len": prompt_len,
         "max_new": max_new,
+        "policy": engine.policy,
+        "radix_cache": engine.cfg.radix_cache,
         "wall_s": t_end - t0,
         "tokens_out": n_tokens,
         "tok_s": n_tokens / max(t_end - t0, 1e-9),
@@ -747,6 +954,8 @@ def run_poisson_load(engine: OnlineEngine, *, rate: float, n_requests: int,
         "itl_p99_ms": 1e3 * _pctl(itl, 99),
         "ticks": engine.ticks - ticks0,
         "preemptions": engine.n_preemptions - preempts0,
+        "shed": engine.n_shed - shed0,
+        "budget_skips": engine.n_budget_skips - budget_skips0,
         "prefill_compiles": engine.prefill_traces,
         "decode_compiles": engine.decode_traces,
         "draft_compiles": engine.draft_traces,
@@ -755,6 +964,9 @@ def run_poisson_load(engine: OnlineEngine, *, rate: float, n_requests: int,
         "prefix_hits": engine.alloc.stats["prefix_hits"] - hits0,
         "prefix_hit_rate": (engine.alloc.stats["prefix_hits"] - hits0)
         / max(n_requests, 1),
+        "prefix_hit_tokens": (engine.alloc.stats["radix_hit_tokens"]
+                              - hit_tok0),
+        "cache_evictions": engine.alloc.stats["evictions"] - evict0,
         "spec_k": engine.cfg.spec_k,
         "acceptance_rate": accepted / max(proposed, 1),
         "decode_ticks_per_token": decode_ticks / max(decoded, 1),

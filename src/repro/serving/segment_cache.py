@@ -271,6 +271,32 @@ class SegmentCache:
 # runs dry.  Fixed-size pages trade SegmentCache's large contiguous
 # blocks for O(1) allocation and zero external fragmentation — the trade
 # vLLM made, and the right one once the device side gathers pages anyway.
+#
+# On top of the page pool sits the **radix prefix cache**: a trie keyed
+# by page-aligned token blocks, so a node's root-path spells the exact
+# token prefix whose KV its page holds.  Requests attach matching pages
+# at admission with no caller coordination (content addressing replaces
+# the explicit `prefix_key` registry, which survives for legacy callers),
+# full pages are *published* into the trie when a request finishes
+# prefill / releases / is preempted, and a deterministic leaf-first LRU
+# sweep evicts unreferenced cached pages only when an allocation would
+# otherwise fail — caching can never cause an OOM an uncached run would
+# not hit.
+
+
+@dataclasses.dataclass
+class RadixNode:
+    """One cached KV page.  `key` is the page's own token block; the
+    concatenated keys on the root path are the full token prefix the
+    page's KV was computed under (depth == logical page index, so
+    absolute positions match by construction)."""
+    key: Tuple[int, ...]
+    page: int
+    parent: Optional["RadixNode"]
+    node_id: int                     # creation order (LRU tie-break)
+    children: Dict[Tuple[int, ...], "RadixNode"] = \
+        dataclasses.field(default_factory=dict)
+    last_used: int = 0
 
 
 class PageAllocator:
@@ -296,8 +322,16 @@ class PageAllocator:
         self.pages: Dict[int, List[int]] = {}         # rid -> logical order
         self.shared_len: Dict[int, int] = {}          # rid -> prefix tokens
         self.prefix_index: Dict[str, List[int]] = {}
+        # radix prefix cache: trie over page-aligned token blocks; each
+        # node holds one refcount on its page
+        self.radix_root = RadixNode(key=(), page=-1, parent=None,
+                                    node_id=0)
+        self._clock = 0                # LRU timestamp (bumped per op)
+        self._next_node_id = 1
         self.stats = {"allocs": 0, "frees": 0, "prefix_hits": 0,
-                      "preempts": 0, "alloc_failures": 0, "trims": 0}
+                      "preempts": 0, "alloc_failures": 0, "trims": 0,
+                      "radix_hit_tokens": 0, "published": 0, "dedups": 0,
+                      "evictions": 0}
 
     # -- queries --------------------------------------------------------------
     @property
@@ -319,20 +353,141 @@ class PageAllocator:
         row[:len(pages)] = pages
         return row
 
+    # -- radix trie helpers ---------------------------------------------------
+    def _blocks(self, tokens) -> List[Tuple[int, ...]]:
+        ps = self.page_size
+        return [tuple(int(t) for t in tokens[i * ps:(i + 1) * ps])
+                for i in range(len(tokens) // ps)]
+
+    def _iter_radix(self):
+        stack = list(self.radix_root.children.values())
+        while stack:
+            node = stack.pop()
+            yield node
+            stack.extend(node.children.values())
+
+    @property
+    def n_cached_pages(self) -> int:
+        """Pages currently held by the radix trie (some may also be
+        attached to live requests)."""
+        return sum(1 for _ in self._iter_radix())
+
+    def match_radix(self, tokens) -> List[RadixNode]:
+        """Longest trie match over the page-aligned blocks of `tokens`
+        (read-only: no refcounts or LRU stamps change)."""
+        node, out = self.radix_root, []
+        for key in self._blocks(tokens):
+            child = node.children.get(key)
+            if child is None:
+                break
+            out.append(child)
+            node = child
+        return out
+
+    def publish_radix(self, rid: int, tokens) -> int:
+        """Publish the request's leading full pages into the trie, keyed
+        by the token content (`tokens` = the token whose KV each written
+        row holds, in row order).  Content-duplicate pages — a second
+        request that raced the same prefix through prefill — are deduped
+        against the existing node, so identical prefixes are stored once
+        no matter how many requests computed them.  Returns the number of
+        pages newly published."""
+        pages = self.pages[rid]
+        n_full = min(len(tokens) // self.page_size, len(pages))
+        self._clock += 1
+        node, new = self.radix_root, 0
+        for i, key in enumerate(self._blocks(tokens)[:n_full]):
+            child = node.children.get(key)
+            if child is None:
+                child = RadixNode(key=key, page=pages[i], parent=node,
+                                  node_id=self._next_node_id)
+                self._next_node_id += 1
+                node.children[key] = child
+                self.refcount[pages[i]] += 1
+                new += 1
+                self.stats["published"] += 1
+            elif child.page != pages[i]:
+                # same content already cached under a different physical
+                # page (the _prefill_tick auto-publish race, content-
+                # addressed): keep the cached copy, the request's private
+                # duplicate recycles normally on release
+                self.stats["dedups"] += 1
+            child.last_used = self._clock
+            node = child
+        return new
+
+    def _drop_node(self, node: RadixNode):
+        del node.parent.children[node.key]
+        self._free_page_ref(node.page)
+
+    def evict_radix(self, n: int) -> int:
+        """Evict up to `n` unreferenced cached pages, deterministic
+        leaf-first LRU: only childless nodes whose page no live request
+        (or explicit prefix entry) still references are candidates; the
+        least-recently-used goes first (node_id breaks ties).  Interior
+        nodes become evictable as their subtrees drain, so a cold chain
+        dies tail-first while its hot prefix survives."""
+        freed = 0
+        while freed < n:
+            best = None
+            for node in self._iter_radix():
+                if node.children or self.refcount[node.page] != 1:
+                    continue
+                if (best is None
+                        or (node.last_used, node.node_id)
+                        < (best.last_used, best.node_id)):
+                    best = node
+            if best is None:
+                return freed
+            self._drop_node(best)
+            freed += 1
+            self.stats["evictions"] += 1
+        return freed
+
+    def flush_radix(self) -> int:
+        """Drop every cached trie entry (pages still attached to live
+        requests survive until those release).  Returns nodes dropped."""
+        n = 0
+        for node in list(self._iter_radix()):
+            self._free_page_ref(node.page)
+            n += 1
+        self.radix_root.children.clear()
+        return n
+
     # -- admission ------------------------------------------------------------
     def admit(self, rid: int, prefix_key: Optional[str] = None,
-              prompt_len: Optional[int] = None) -> int:
+              prompt_len: Optional[int] = None, tokens=None) -> int:
         """Bind a request; attach refcounted prefix pages on a hit.
-        `prompt_len` caps the attachment to pages the request's OWN
-        prompt fully covers — a consumer whose prompt is shorter than
-        the published prefix must not attach (and later decode-write
-        into) shared pages beyond it.  Returns the number of prompt
-        tokens already covered (0 on a miss) — the engine starts
-        prefilling there."""
+
+        With `tokens` (the token sequence the request will prefill), the
+        attach is **content-addressed**: the radix trie is walked with
+        the page-aligned blocks of `tokens` and every matching cached
+        page attaches automatically — no caller coordination.  The match
+        is exact by construction, so no clamp is needed beyond full-page
+        coverage of the request's own tokens.
+
+        The legacy path attaches `prefix_key`'s published pages, capped
+        by `prompt_len` — a consumer whose prompt is shorter than the
+        published prefix must not attach (and later decode-write into)
+        shared pages beyond it.
+
+        Returns the number of tokens already covered (0 on a miss) —
+        the engine starts prefilling there."""
         assert rid not in self.pages, f"rid {rid} already admitted"
         self.pages[rid] = []
         self.shared_len[rid] = 0
-        if prefix_key and prefix_key in self.prefix_index:
+        if tokens is not None:
+            matched = self.match_radix(tokens)
+            self._clock += 1
+            for node in matched:
+                self.refcount[node.page] += 1
+                node.last_used = self._clock
+            self.pages[rid] = [n.page for n in matched]
+            self.shared_len[rid] = len(matched) * self.page_size
+            if matched:
+                self.stats["prefix_hits"] += 1
+                self.stats["radix_hit_tokens"] += self.shared_len[rid]
+        elif prefix_key and prefix_key in self.prefix_index:
             shared = self.prefix_index[prefix_key]
             if prompt_len is not None:
                 shared = shared[:prompt_len // self.page_size]
@@ -359,11 +514,16 @@ class PageAllocator:
     # -- growth ---------------------------------------------------------------
     def ensure_capacity(self, rid: int, n_tokens: int) -> bool:
         """Grow the request to hold n_tokens; all-or-nothing so a failed
-        grow never strands half an allocation.  False = pool exhausted
+        grow never strands half an allocation.  When the free list is
+        short, unreferenced radix-cached pages are evicted (leaf-first
+        LRU) to cover the gap — cached pages never block an allocation
+        an uncached run could satisfy.  False = pool genuinely exhausted
         (caller preempts a victim and retries, or parks the request)."""
         need = -(-n_tokens // self.page_size) - len(self.pages[rid])
         if need <= 0:
             return True
+        if need > len(self.free_list):
+            self.evict_radix(need - len(self.free_list))
         if need > len(self.free_list):
             self.stats["alloc_failures"] += 1
             return False
@@ -398,34 +558,41 @@ class PageAllocator:
             self.stats["frees"] += 1
             self.stats["trims"] += 1
 
-    def release(self, rid: int):
+    def _free_page_ref(self, p: int):
+        self.refcount[p] -= 1
+        if self.refcount[p] == 0:
+            del self.refcount[p]
+            self.free_list.append(p)
+            self.stats["frees"] += 1
+
+    def release(self, rid: int, tokens=None):
         """Free a finished request's pages (shared prefix pages survive
-        while other holders — or the prefix index — still reference
-        them)."""
+        while other holders — or the prefix index / radix trie — still
+        reference them).  With `tokens` (the request's written token
+        history), the leading full pages are *published* into the radix
+        trie instead of recycled, so the next request with the same
+        prefix attaches them for free."""
+        if tokens is not None:
+            self.publish_radix(rid, tokens)
         for p in self.pages.pop(rid):
-            self.refcount[p] -= 1
-            if self.refcount[p] == 0:
-                del self.refcount[p]
-                self.free_list.append(p)
-                self.stats["frees"] += 1
+            self._free_page_ref(p)
         del self.shared_len[rid]
 
-    def preempt(self, rid: int):
+    def preempt(self, rid: int, tokens=None):
         """Pool-pressure eviction: identical to release at the allocator
         level; the engine requeues the request for deterministic FCFS
-        re-admission and re-prefills on its next turn."""
+        re-admission and re-prefills on its next turn.  With `tokens`
+        the victim's full pages are published first, so re-admission
+        re-attaches them (unless the sweep had to evict them in the
+        meantime) and the re-prefill shrinks to the tail."""
         self.stats["preempts"] += 1
-        self.release(rid)
+        self.release(rid, tokens=tokens)
 
     def drop_prefix(self, key: str):
         """Unpublish a shared prefix (its pages free once no request
         still holds them)."""
         for p in self.prefix_index.pop(key):
-            self.refcount[p] -= 1
-            if self.refcount[p] == 0:
-                del self.refcount[p]
-                self.free_list.append(p)
-                self.stats["frees"] += 1
+            self._free_page_ref(p)
 
     # -- invariants -----------------------------------------------------------
     def check_invariants(self):
@@ -436,6 +603,12 @@ class PageAllocator:
         for pages in self.prefix_index.values():
             for p in pages:
                 refs[p] = refs.get(p, 0) + 1
+        cached = []
+        for node in self._iter_radix():
+            refs[node.page] = refs.get(node.page, 0) + 1
+            cached.append(node.page)
+        assert len(set(cached)) == len(cached), \
+            "page cached at two trie nodes"
         assert refs == self.refcount, (refs, self.refcount)
         live = set(refs)
         free = set(self.free_list)

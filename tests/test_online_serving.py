@@ -100,6 +100,10 @@ def test_online_compile_count_under_churn(runner_params):
     for r in reqs:
         assert r.done and len(r.out) == r.max_new, (r.rid, r.state)
     eng.alloc.check_invariants()
+    # released pages are *published* into the radix cache, not freed;
+    # flushing the cache must hand every page back to the pool
+    eng.alloc.flush_radix()
+    eng.alloc.check_invariants()
     assert eng.alloc.n_free == eng.alloc.n_pages - eng.alloc.reserved
 
     # deterministic re-admission order and outputs across identical runs
@@ -111,15 +115,16 @@ def test_online_compile_count_under_churn(runner_params):
 
 
 def test_online_prefix_sharing(runner_params):
-    """Refcounted prefix pages: a second request carrying the prefix key
-    skips prefilling the shared full pages and still produces exactly the
-    no-sharing outputs; pages free only once the index is dropped."""
+    """Legacy keyed prefix path (radix_cache=False): a second request
+    carrying the prefix key skips prefilling the shared full pages and
+    still produces exactly the no-sharing outputs; pages free only once
+    the index is dropped."""
     runner, params = runner_params
     S, P, NEW = 64, 16, 4
     rs = np.random.RandomState(3)
     prompt = rs.randint(0, runner.cfg.vocab_size, P).astype(np.int32)
     ocfg = OnlineConfig(max_slots=4, max_context=S, page_size=8,
-                        prefill_chunk=8)
+                        prefill_chunk=8, radix_cache=False)
 
     eng = OnlineEngine(runner, params, ocfg)
     a = OnlineRequest(rid=0, prompt=prompt, max_new=NEW)
@@ -143,6 +148,180 @@ def test_online_prefix_sharing(runner_params):
     # ...and return to the pool when dropped
     eng.alloc.drop_prefix("sys")
     eng.alloc.check_invariants()
+    assert eng.alloc.n_free == eng.alloc.n_pages - eng.alloc.reserved
+
+
+def test_online_radix_prefix_sharing(runner_params):
+    """Radix twin of the keyed test: NO caller-supplied prefix_key
+    anywhere.  The first request's prompt pages are published into the
+    content-addressed trie on release; a second request with the same
+    prompt attaches them automatically, emits identical greedy output,
+    and flushing the cache returns every page to the pool."""
+    runner, params = runner_params
+    S, P, NEW = 64, 16, 4
+    rs = np.random.RandomState(3)
+    prompt = rs.randint(0, runner.cfg.vocab_size, P).astype(np.int32)
+    eng = OnlineEngine(runner, params,
+                       OnlineConfig(max_slots=4, max_context=S,
+                                    page_size=8, prefill_chunk=8))
+
+    a = OnlineRequest(rid=0, prompt=prompt, max_new=NEW)
+    eng.submit(a)
+    eng.run(max_ticks=200)
+    assert a.done
+    # the full prompt pages are cached (published on prefill completion)
+    assert eng.alloc.n_cached_pages >= P // 8
+
+    b = OnlineRequest(rid=1, prompt=prompt, max_new=NEW)
+    eng.submit(b)
+    eng.run(max_ticks=200)
+    assert eng.alloc.stats["prefix_hits"] >= 1
+    assert eng.alloc.stats["radix_hit_tokens"] >= P
+    assert b.out == a.out                      # same prompt, greedy decode
+    eng.alloc.check_invariants()
+    eng.alloc.flush_radix()
+    eng.alloc.check_invariants()
+    assert eng.alloc.n_free == eng.alloc.n_pages - eng.alloc.reserved
+
+
+def _run_stream(runner, params, reqs_fn, **cfg_kw):
+    """Drive a fresh engine over a request stream; return per-rid outputs
+    and the engine (for stats)."""
+    eng = OnlineEngine(runner, params, OnlineConfig(**cfg_kw))
+    reqs = reqs_fn()
+    eng.submit_many(reqs)
+    eng.run(max_ticks=5000)
+    for r in reqs:
+        assert r.done, (r.rid, r.state)
+    return [list(r.out) for r in reqs], eng
+
+
+def test_radix_parity_greedy_and_sampled(runner_params):
+    """Token-exactness: the same request stream with the radix cache on
+    vs off is bitwise identical, under greedy AND seeded sampling (the
+    counter-based key schedule depends only on (seed, pos), never on
+    which pages held the KV)."""
+    runner, params = runner_params
+    rs = np.random.RandomState(5)
+    sys_prompt = rs.randint(0, runner.cfg.vocab_size, 16).astype(np.int32)
+
+    def make_reqs():
+        rs2 = np.random.RandomState(9)
+        reqs = []
+        for i in range(6):
+            tail = rs2.randint(0, runner.cfg.vocab_size,
+                               3 + (i % 4)).astype(np.int32)
+            prompt = np.concatenate([sys_prompt, tail]) if i % 2 == 0 \
+                else tail
+            # even rids: greedy; odd rids: seeded sampling
+            kw = {} if i % 2 == 0 else dict(temperature=0.8, top_p=0.9,
+                                            top_k=40, seed=100 + i)
+            reqs.append(OnlineRequest(rid=i, prompt=prompt, max_new=5,
+                                      **kw))
+        return reqs
+
+    geo = dict(max_slots=4, max_context=64, page_size=8, prefill_chunk=4)
+    out_on, eng_on = _run_stream(runner, params, make_reqs,
+                                 radix_cache=True, **geo)
+    out_off, _ = _run_stream(runner, params, make_reqs,
+                             radix_cache=False, **geo)
+    assert out_on == out_off
+    # the shared system prompt must actually have produced hits
+    assert eng_on.alloc.stats["prefix_hits"] >= 1
+    assert eng_on.prefill_traces == 1 and eng_on.decode_traces == 1
+
+
+def test_radix_parity_eviction_reprefill(runner_params):
+    """Eviction leg: a pool sized to force LRU eviction and preemption
+    mid-stream (cached prefixes get evicted, preempted requests
+    re-prefill and re-attach) still yields bitwise-identical tokens with
+    the cache on vs off."""
+    runner, params = runner_params
+    rs = np.random.RandomState(13)
+    sys_prompt = rs.randint(0, runner.cfg.vocab_size, 8).astype(np.int32)
+
+    def make_reqs():
+        rs2 = np.random.RandomState(21)
+        reqs = []
+        for i in range(13):
+            tail = rs2.randint(0, runner.cfg.vocab_size,
+                               1 + (i % 5)).astype(np.int32)
+            prompt = np.concatenate([sys_prompt, tail]) if i % 3 else tail
+            kw = {} if i % 2 == 0 else dict(temperature=0.7, seed=i)
+            reqs.append(OnlineRequest(rid=i, prompt=prompt,
+                                      max_new=6 + (i % 7), **kw))
+        return reqs
+
+    geo = dict(max_slots=4, max_context=32, page_size=8, n_pages=7,
+               prefill_chunk=4)
+    out_on, eng_on = _run_stream(runner, params, make_reqs,
+                                 radix_cache=True, **geo)
+    out_off, eng_off = _run_stream(runner, params, make_reqs,
+                                   radix_cache=False, **geo)
+    assert out_on == out_off
+    # the tight pool must actually have exercised the eviction sweep —
+    # caching never causes an OOM, it just gets swept when space is tight
+    assert eng_on.alloc.stats["evictions"] > 0
+    assert eng_on.prefill_traces == 1 and eng_on.decode_traces == 1
+    eng_on.alloc.check_invariants()
+
+
+def test_legacy_same_key_racer_regression(runner_params):
+    """Legacy keyed path regression (the bug the radix cache fixes): two
+    same-key requests racing through prefill — only the first finisher
+    publishes; the second's identical pages must stay private and
+    recycle on its release (no leak, no double-registration), and a
+    later keyed request still hits the published copy."""
+    runner, params = runner_params
+    S, P = 64, 16
+    rs = np.random.RandomState(3)
+    prompt = rs.randint(0, runner.cfg.vocab_size, P).astype(np.int32)
+    eng = OnlineEngine(runner, params,
+                       OnlineConfig(max_slots=4, max_context=S,
+                                    page_size=8, prefill_chunk=8,
+                                    radix_cache=False))
+    # both admitted before either finishes prefill: neither hits at
+    # admission (index empty), both race to the publish point
+    eng.submit_many([OnlineRequest(rid=0, prompt=prompt, max_new=3,
+                                   prefix_key="sys", prefix_len=P),
+                     OnlineRequest(rid=1, prompt=prompt, max_new=3,
+                                   prefix_key="sys", prefix_len=P)])
+    eng.run(max_ticks=300)
+    assert eng.alloc.stats["prefix_hits"] == 0
+    held = len(eng.alloc.prefix_index["sys"])
+    assert held == P // 8                      # registered exactly once
+    # the loser's duplicate pages recycled on release — only the
+    # published copy outlives the pair
+    eng.alloc.check_invariants()
+    assert eng.alloc.n_free == eng.alloc.n_pages - eng.alloc.reserved - held
+
+    c = OnlineRequest(rid=2, prompt=prompt, max_new=3, prefix_key="sys",
+                      prefix_len=P)
+    eng.submit(c)
+    eng.run(max_ticks=200)
+    assert eng.alloc.stats["prefix_hits"] == 1
+    eng.alloc.drop_prefix("sys")
+    assert eng.alloc.n_free == eng.alloc.n_pages - eng.alloc.reserved
+
+
+def test_radix_same_prefix_racer_dedupes(runner_params):
+    """Radix counterpart: two same-prompt racers both publish on prefill
+    completion; content addressing keeps exactly one cached copy (the
+    dedups stat counts the collision) and the invariant checker proves
+    no page is cached at two nodes."""
+    runner, params = runner_params
+    S, P = 64, 16
+    rs = np.random.RandomState(3)
+    prompt = rs.randint(0, runner.cfg.vocab_size, P).astype(np.int32)
+    eng = OnlineEngine(runner, params,
+                       OnlineConfig(max_slots=4, max_context=S,
+                                    page_size=8, prefill_chunk=8))
+    eng.submit_many([OnlineRequest(rid=0, prompt=prompt, max_new=3),
+                     OnlineRequest(rid=1, prompt=prompt, max_new=3)])
+    eng.run(max_ticks=300)
+    assert eng.alloc.stats["dedups"] > 0
+    eng.alloc.check_invariants()
+    eng.alloc.flush_radix()
     assert eng.alloc.n_free == eng.alloc.n_pages - eng.alloc.reserved
 
 
@@ -218,6 +397,33 @@ _TP2_SCRIPT = textwrap.dedent("""
     sout = np.stack([np.asarray(seng.reqs[i].out) for i in range(B)])
     np.testing.assert_array_equal(sout, ref)
     assert seng.draft_traces == 1 and seng.verify_traces == 1
+
+    # radix prefix cache on the tp=2 EP path: a stream sharing a full
+    # page of prompt is bitwise identical with the cache on vs off, and
+    # the cache actually hits (pages are split across tp ranks; the
+    # trie only tracks page ids, so sharding is invisible to it)
+    shared = rs.randint(0, cfg.vocab_size, 8).astype(np.int32)
+    def radix_stream(radix):
+        # 2 slots so the second wave admits AFTER the first wave
+        # publishes -> real cross-request hits
+        e = OnlineEngine(runner, params,
+                         OnlineConfig(max_slots=2, max_context=S,
+                                      page_size=8, prefill_chunk=4,
+                                      radix_cache=radix))
+        rr = [OnlineRequest(rid=i, prompt=np.concatenate(
+                  [shared, rs2.randint(0, cfg.vocab_size, 2
+                                       ).astype(np.int32)]),
+                  max_new=4)
+              for i in range(B)]
+        e.submit_many(rr)
+        e.run(max_ticks=500)
+        return [list(r.out) for r in rr], e
+    rs2 = np.random.RandomState(17)
+    on_out, on_eng = radix_stream(True)
+    rs2 = np.random.RandomState(17)
+    off_out, _ = radix_stream(False)
+    assert on_out == off_out, "radix on/off diverged on tp=2 EP"
+    assert on_eng.alloc.stats["prefix_hits"] >= 1
 
     # EP decode-batch constraint: max_slots % tp != 0 must be rejected
     try:

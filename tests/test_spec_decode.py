@@ -127,6 +127,10 @@ def test_spec_compile_counts_under_churn(runner_params):
     for r in reqs:
         assert r.done and len(r.out) == r.max_new, (r.rid, r.state)
     eng.alloc.check_invariants()
+    # released pages are *published* into the radix cache, not freed;
+    # flushing the cache must hand every page back to the pool
+    eng.alloc.flush_radix()
+    eng.alloc.check_invariants()
     assert eng.alloc.n_free == eng.alloc.n_pages - eng.alloc.reserved
 
     eng2, reqs2 = drive()
