@@ -228,6 +228,23 @@ def run(fast=False):
     saved = 2 * V * dd * 2 / 1e9
     rows.append(("kernel_normhead_hbm_saving", "0",
                  f"{saved:.1f}GB_per_step_ling_plus"))
+    # paged attention: fused page-table-walking kernel vs the gathered
+    # oracle on a small decode tick (the full sweep + committed JSON is
+    # benchmarks/bench_paged_attn.py)
+    from benchmarks.bench_paged_attn import (_decode_case, _fused_attn,
+                                             _gathered_attn)
+    pq, pk, pv, ptab, pmask = _decode_case(
+        rs, B=4, n_lp=6, page_size=8, Hp=4, KV=2, hd=32,
+        page_counts=[4, 2, 1, 1])
+    us = _time(lambda: _fused_attn(pq, pk, pv, ptab, pmask), fast=fast)
+    rows.append(("kernel_paged_attn_fused_B4_lp6_ps8", f"{us:.0f}",
+                 "interpret_mode_decode_Q1"))
+    pd = float(jnp.max(jnp.abs(
+        _fused_attn(pq, pk, pv, ptab, pmask)
+        - _gathered_attn(pq, pk, pv, ptab, pmask))))
+    rows.append(("kernel_paged_attn_maxdiff_vs_gathered", "0",
+                 f"{pd:.1e}_f32_summation_order"))
+
     # wkv6
     B, T3, H, hd = 2, 128, 2, 64
     args = [jnp.asarray(rs.randn(B, T3, H, hd) * 0.3, jnp.float32)

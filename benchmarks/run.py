@@ -19,6 +19,7 @@ Paper artifacts covered:
   fig12_13_scaling   hyper-param + loss scaling laws, MoE efficiency lever
   fig14_spikes       loss-spike skip + sample-retry training comparison
   kernels            Pallas kernel micro-timings (interpret mode)
+  paged_attn         fused page-walking attention vs gathered-KV oracle
   train_step         engine step time: donation x accumulation x host-sync
   roofline           §Dry-run/§Roofline table from experiments/dryrun/
 """
@@ -34,7 +35,7 @@ BENCHES = [
     "fig4_xputimer", "fig8_edit", "table2_pcache", "babel_metadata",
     "babel_crc", "table3_flood", "serve_online", "spec_decode",
     "dpo_packing", "table1_hetero", "fig12_13_scaling", "fig14_spikes",
-    "fig18_eval", "kernels", "train_step", "roofline",
+    "fig18_eval", "kernels", "paged_attn", "train_step", "roofline",
 ]
 
 

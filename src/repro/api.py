@@ -355,10 +355,15 @@ class Runner:
         (the page_size dim is split over tp: rank r owns in-page offsets
         [r*ps_loc, (r+1)*ps_loc), preserving the dense decode cache's 1/tp
         memory sharding).  Page 0 is the scratch page — the online
-        engine's allocator never hands it out."""
+        engine's allocator never hands it out.  Also the choke point that
+        validates `flags.paged_attn` (every paged serve step builds its
+        pools here) before any step traces."""
         if page_size % self.env.tp:
             raise ValueError(f"page_size={page_size} must be divisible by "
                              f"tp={self.env.tp} (in-page offset sharding)")
+        if self.flags.paged_attn not in ("auto", "fused", "gathered"):
+            raise ValueError("flags.paged_attn must be auto|fused|gathered: "
+                             f"{self.flags.paged_attn!r}")
         specs = paged_cache_specs(self.cfg, self.env)
         shardings = jax.tree.map(
             lambda s: jax.sharding.NamedSharding(self.mesh, s), specs,

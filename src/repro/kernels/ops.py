@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.kernels import grouped_matmul as _gm
 from repro.kernels import normhead as _nh
+from repro.kernels import paged_attn as _pa
 from repro.kernels import wkv6 as _wkv
 
 INTERPRET = jax.default_backend() != "tpu"
@@ -152,14 +153,93 @@ def paged_gather(pool, table):
     yields a dense (S, ...) cache view the standard decode-attention
     einsums consume unchanged.
 
-    This is a pure gather along the page dim — on TPU it lowers to a
-    dynamic-slice DMA per page row, the same access pattern the fused
-    MoE kernel's row gather uses; a dedicated Mosaic kernel that fuses
-    the gather into the attention QK matmul is a ROADMAP follow-up
-    (today XLA fuses the take into the consumer in interpret and
-    compiled modes alike).
+    This is a pure gather along the page dim — it materializes the full
+    table-width view in HBM once per layer per tick.  It backs the
+    "gathered" paged-attention mode (the parity oracle and real-TPU
+    fallback); the "fused" mode (`paged_attention` below) walks the page
+    table inside the attention kernel instead, so this view never
+    exists.
     """
     return jnp.take(pool, table, axis=0)
+
+
+def _pa_group_q(q, KV):
+    """(B, Q, Hp, hd) -> (B, KV, g*Q, hd), g-major: one q block per kv
+    head so a (Q, ps_loc) mask block broadcasts over the group."""
+    B, Qn, Hp, hd = q.shape
+    g = Hp // KV
+    return q.reshape(B, Qn, KV, g, hd).transpose(0, 2, 3, 1, 4) \
+            .reshape(B, KV, g * Qn, hd)
+
+
+def _pa_ungroup(x, Qn, Hp):
+    """(B, KV, g*Q, ...) -> (B, Q, Hp, ...), inverse of `_pa_group_q`."""
+    B, KV = x.shape[:2]
+    g = Hp // KV
+    y = x.reshape((B, KV, g, Qn) + x.shape[3:])
+    y = jnp.moveaxis(y, 3, 1)
+    return y.reshape((B, Qn, Hp) + x.shape[3:])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_scores_max(q, k_pool, table, mask, *,
+                               interpret: bool | None = None):
+    """Pass 1 of fused paged attention: per-rank row max of the masked
+    scores, page table walked in-kernel (kernels/paged_attn.py).
+
+    q (B, Q, Hp, hd): query-batched heads — Q=1 decode, Q=C chunked
+    prefill, Q=k+1 spec-decode verify;  k_pool (n_pages, ps_loc, KV, hd):
+    the layer's K page pool (ps_loc = this tp rank's row-slice of each
+    page);  table (B, n_lp) int32 physical page per logical page (0 =
+    scratch/unallocated — rows must be masked);  mask (B, Q, S_g) bool
+    with S_g = n_lp * ps_loc: page-valid & causal validity per query
+    (models/layers.py::paged_valid_mask).
+
+    Requires the grouped GQA layout: Hp % KV == 0 with head h belonging
+    to kv head h // (Hp // KV) — the same precondition as the gathered
+    path's grouped fast path; `_paged_attention_core` falls back to
+    "gathered" otherwise.
+
+    Returns m (B, Q, Hp) f32 — the LOCAL max masked score over this
+    rank's pool rows (-inf where nothing valid).  Callers pmax over tp,
+    zero the -inf rows, and feed the result to
+    `paged_attention_accumulate` so p is computed against the GLOBAL max
+    exactly like the gathered oracle.
+    """
+    interpret = INTERPRET if interpret is None else interpret
+    B, Qn, Hp, hd = q.shape
+    _, ps_loc, KV, _ = k_pool.shape
+    n_lp = table.shape[1]
+    m = _pa.paged_attn_scores_max(
+        _pa_group_q(q, KV), k_pool, table,
+        mask.reshape(B, Qn, n_lp, ps_loc), interpret=interpret)
+    return _pa_ungroup(m, Qn, Hp)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_accumulate(q, k_pool, v_pool, table, mask, m_safe, *,
+                               interpret: bool | None = None):
+    """Pass 2 of fused paged attention: accumulate softmax partials
+    against the tp-GLOBAL safe max (kernels/paged_attn.py).
+
+    Operands as in `paged_attention_scores_max` plus v_pool (same shape
+    as k_pool) and m_safe (B, Q, Hp) f32 — the pmax'ed row max with -inf
+    replaced by 0.  Inside the kernel p = exp(s - m_safe) is rounded to
+    the pool dtype before the PV contraction, the gathered combine's
+    `p.astype(cdt)` convention, so every softmax term is bitwise the
+    oracle's term at any tp.  Returns LOCAL fp32 partials
+    (num (B, Q, Hp, hd), den (B, Q, Hp)) over this rank's pool rows;
+    callers psum both over tp and normalize.
+    """
+    interpret = INTERPRET if interpret is None else interpret
+    B, Qn, Hp, hd = q.shape
+    _, ps_loc, KV, _ = k_pool.shape
+    n_lp = table.shape[1]
+    num, den = _pa.paged_attn_accumulate(
+        _pa_group_q(q, KV), k_pool, v_pool, table,
+        mask.reshape(B, Qn, n_lp, ps_loc),
+        _pa_group_q(m_safe[..., None], KV)[..., 0], interpret=interpret)
+    return _pa_ungroup(num, Qn, Hp), _pa_ungroup(den, Qn, Hp)
 
 
 # ---------------------------------------------------------------------------

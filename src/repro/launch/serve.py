@@ -180,7 +180,8 @@ def run_online(cfg, mesh, flags, args) -> None:
                    "radix_cache": ocfg.radix_cache, "policy": ocfg.policy,
                    "max_queue": ocfg.max_queue, "overload": ocfg.overload,
                    "tenant_budgets": budgets,
-                   "tp": args.tp, "moe_dispatch": args.moe_dispatch},
+                   "tp": args.tp, "moe_dispatch": args.moe_dispatch,
+                   "paged_attn": args.paged_attn},
         "note": ("interpret-mode CPU wall clock - scheduling/latency "
                  "shape, NOT TPU performance"),
         "rates": cases,
@@ -271,11 +272,19 @@ def main():
                     help="MoE decode dispatch; 'ep' routes decode batches "
                          "over the mesh via the all-to-all expert-parallel "
                          "path (requires microbatch %% tp == 0)")
+    ap.add_argument("--paged-attn", default="auto",
+                    choices=["auto", "fused", "gathered"],
+                    help="online paged-attention backend: 'fused' walks the "
+                         "page table inside the Pallas kernel (no gathered "
+                         "KV view in HBM), 'gathered' materializes it via "
+                         "paged_gather (parity oracle); 'auto' = fused on "
+                         "interpret builds, gathered on real TPUs")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     mesh = make_local_mesh(1, args.tp)
-    flags = M.RunFlags(moe_dispatch=args.moe_dispatch)
+    flags = M.RunFlags(moe_dispatch=args.moe_dispatch,
+                       paged_attn=args.paged_attn)
     if args.online:
         run_online(cfg, mesh, flags, args)
         return

@@ -569,16 +569,27 @@ def init_paged_kv_pool(cfg, n_pages: int, page_size: int
     return {"k": jnp.zeros(shape, cdt), "v": jnp.zeros(shape, cdt)}
 
 
-def _paged_geometry(pool, table_width: int, page_size: int, env: AxisEnv):
-    """(ps_loc, S_g, gpos): gathered length and the global sequence
-    position of every gathered row on this rank.  Gathered row j of
-    logical page i sits at position i*page_size + r*ps_loc + j."""
-    ps_loc = pool["k"].shape[1]
-    S_g = table_width * ps_loc
+def paged_valid_mask(table, pos, *, page_size: int, ps_loc: int,
+                     env: AxisEnv):
+    """Once-per-tick paged-attention validity mask (B, Q, S_g).
+
+    table (B, n_lp) physical page per logical page (0 = unallocated);
+    pos (B, Q) int32 query positions (inclusive — a query attends to its
+    own just-written row).  Pool row j of logical page i sits at global
+    position i*page_size + r*ps_loc + j on rank r; a row is attendable
+    iff its logical page is allocated AND its position is <= the query's.
+    The mask is identical across layers, so models/model.py computes it
+    once per serve tick and threads it through the layer scan instead of
+    re-deriving the jnp.repeat + gpos comparison per layer; the layer
+    entry points only recompute it when called standalone (valid=None).
+    """
+    n_lp = table.shape[-1]
+    S_g = n_lp * ps_loc
     j = jnp.arange(S_g)
     gpos = ((j // ps_loc) * page_size + env.tp_index() * ps_loc
             + j % ps_loc)
-    return ps_loc, S_g, gpos
+    pvalid = jnp.repeat(table > 0, ps_loc, axis=-1)          # (B, S_g)
+    return pvalid[:, None, :] & (gpos[None, None, :] <= pos[:, :, None])
 
 
 def _paged_write(pool, k_new, v_new, pos, page_table, owns, *,
@@ -599,77 +610,140 @@ def _paged_write(pool, k_new, v_new, pos, page_table, owns, *,
             "v": pool["v"].at[dest, o_loc].set(v_new.astype(cdt))}
 
 
-def _decode_scores_combine(cfg, env: AxisEnv, ad: AttnDims, q_all, k_g, v_g,
-                           valid, cdt):
-    """Shared decode-attention tail for BOTH the dense S-sharded cache
-    and the paged pools: masked scores + online-softmax (num, den) psum
-    over tp + normalize.  q_all (B, Hp, hd); k_g/v_g (B, S, KV, hd);
-    valid (B, S).  Fast path: when no head padding happened and heads
-    group evenly onto kv heads, q reshapes to (kv, group) and contracts
-    against the cache directly — no expanded KV copy ever hits HBM (big
-    decode-bandwidth win, see EXPERIMENTS.md §Perf); p stays in compute
-    dtype for the PV contraction (flash-kernel convention) so no f32
-    copy of the cache-sized V materializes either."""
+def _paged_scores_combine(cfg, env: AxisEnv, ad: AttnDims, q_all, k_g, v_g,
+                          valid, cdt):
+    """Query-batched attention tail over ONE shared cache view: masked
+    scores + online-softmax (num, den) psum over tp + normalize.
+
+    q_all (B, Q, Hp, hd); k_g/v_g (B, S, KV, hd) — read once, every
+    query contracts against the same view via batched einsums (no
+    per-query broadcast_to copy);  valid (B, Q, S).  Fast path: when no
+    head padding happened and heads group evenly onto kv heads, q
+    reshapes to (kv, group) and contracts against the cache directly —
+    no expanded KV copy ever hits HBM (big decode-bandwidth win, see
+    EXPERIMENTS.md §Perf); p stays in compute dtype for the PV
+    contraction (flash-kernel convention) so no f32 copy of the
+    cache-sized V materializes either.  Returns (B, Q, Hp, hd)."""
     hd = ad.head_dim
-    B, S_g = valid.shape
+    B, Qn, S_g = valid.shape
     grouped = (ad.n_heads == ad.heads_padded
                and ad.heads_padded % ad.n_kv == 0)
     if grouped:
         g = ad.heads_padded // ad.n_kv
-        q_g = q_all.reshape(B, ad.n_kv, g, hd)
-        s = jnp.einsum("bkgd,bskd->bkgs", q_g, k_g,
+        q_g = q_all.reshape(B, Qn, ad.n_kv, g, hd)
+        s = jnp.einsum("bqkgd,bskd->bqkgs", q_g, k_g,
                        preferred_element_type=jnp.float32) * hd ** -0.5
-        s = s.reshape(B, ad.heads_padded, S_g)
+        s = s.reshape(B, Qn, ad.heads_padded, S_g)
     else:
         group = max(ad.n_heads // ad.n_kv, 1)
         hp_kv = jnp.minimum(jnp.arange(ad.heads_padded) // group,
                             ad.n_kv - 1)
         k_exp = jnp.take(k_g, hp_kv, axis=2)
-        s = jnp.einsum("bhd,bshd->bhs", q_all, k_exp,
+        s = jnp.einsum("bqhd,bshd->bqhs", q_all, k_exp,
                        preferred_element_type=jnp.float32) * hd ** -0.5
-    s = jnp.where(valid[:, None, :], s, -jnp.inf)
+    s = jnp.where(valid[:, :, None, :], s, -jnp.inf)
     m_loc = jnp.max(s, axis=-1)
     m = env.pmax_tp(m_loc)
     m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
-    p = jnp.where(valid[:, None, :], jnp.exp(s - m_safe[..., None]), 0.0)
+    p = jnp.where(valid[:, :, None, :], jnp.exp(s - m_safe[..., None]), 0.0)
     p_c = p.astype(cdt)
     if grouped:
-        p_g = p_c.reshape(B, ad.n_kv, ad.heads_padded // ad.n_kv, S_g)
-        num = jnp.einsum("bkgs,bskd->bkgd", p_g, v_g,
+        p_g = p_c.reshape(B, Qn, ad.n_kv, ad.heads_padded // ad.n_kv, S_g)
+        num = jnp.einsum("bqkgs,bskd->bqkgd", p_g, v_g,
                          preferred_element_type=jnp.float32)
-        num = num.reshape(B, ad.heads_padded, hd)
+        num = num.reshape(B, Qn, ad.heads_padded, hd)
     else:
         group = max(ad.n_heads // ad.n_kv, 1)
         hp_kv = jnp.minimum(jnp.arange(ad.heads_padded) // group,
                             ad.n_kv - 1)
         v_exp = jnp.take(v_g, hp_kv, axis=2)
-        num = jnp.einsum("bhs,bshd->bhd", p_c, v_exp,
+        num = jnp.einsum("bqhs,bshd->bqhd", p_c, v_exp,
                          preferred_element_type=jnp.float32)
     den = jnp.sum(p, axis=-1)
     num, den = env.psum_tp((num, den))
     return (num / jnp.maximum(den, 1e-20)[..., None]).astype(cdt)
 
 
+def _decode_scores_combine(cfg, env: AxisEnv, ad: AttnDims, q_all, k_g, v_g,
+                           valid, cdt):
+    """Single-query shim over `_paged_scores_combine` for the dense
+    S-sharded decode cache: q_all (B, Hp, hd), valid (B, S)."""
+    out = _paged_scores_combine(cfg, env, ad, q_all[:, None], k_g, v_g,
+                                valid[:, None], cdt)
+    return out[:, 0]
+
+
+def resolve_paged_attn(mode: str) -> str:
+    """RunFlags.paged_attn -> concrete mode.  "auto" follows the PR 1/2
+    policy: the fused Pallas kernel on interpret builds, the gathered
+    jnp oracle on real TPUs until the tile sweep (ROADMAP item 3)."""
+    if mode == "auto":
+        from repro.kernels import ops as kops
+        return "fused" if kops.INTERPRET else "gathered"
+    if mode not in ("fused", "gathered"):
+        raise ValueError(f"paged_attn must be auto|fused|gathered: {mode}")
+    return mode
+
+
+def _paged_attention_core(cfg, env: AxisEnv, ad: AttnDims, q_all, pool,
+                          table, valid, cdt, *, paged_attn: str):
+    """Shared query-batched paged-attention core for all three callers
+    (decode Q=1, chunked prefill Q=C, spec-decode verify Q=k+1).
+
+    q_all (B, Q, Hp, hd); pool k/v (n_pages, ps_loc, KV, hd); table
+    (B, n_lp); valid (B, Q, S_g).  "fused" walks the page table inside
+    the Pallas kernel (kernels/paged_attn.py) and combines the local
+    (num, m, den) partials over tp here — the gathered (B, S_g, KV, hd)
+    view never touches HBM; "gathered" materializes it once per layer
+    via `ops.paged_gather` (the parity oracle).  The fused kernel needs
+    the grouped GQA layout; head-padded / unevenly-grouped archs fall
+    back to gathered.  Returns (B, Q, Hp, hd)."""
+    from repro.kernels import ops as kops
+    hd = ad.head_dim
+    B = q_all.shape[0]
+    mode = resolve_paged_attn(paged_attn)
+    grouped = (ad.n_heads == ad.heads_padded
+               and ad.heads_padded % ad.n_kv == 0)
+    if mode == "fused" and grouped:
+        # max pass -> tp pmax -> accumulate pass: p is computed against
+        # the GLOBAL max inside the kernel and rounded to cdt there, so
+        # every softmax term matches the gathered oracle at any tp.
+        m_loc = kops.paged_attention_scores_max(q_all, pool["k"], table,
+                                                valid)
+        m = env.pmax_tp(m_loc)
+        m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+        num, den = kops.paged_attention_accumulate(
+            q_all, pool["k"], pool["v"], table, valid, m_safe)
+        num, den = env.psum_tp((num, den))
+        return (num / jnp.maximum(den, 1e-20)[..., None]).astype(cdt)
+    S_g = valid.shape[-1]
+    k_g = kops.paged_gather(pool["k"], table).reshape(B, S_g, ad.n_kv, hd)
+    v_g = kops.paged_gather(pool["v"], table).reshape(B, S_g, ad.n_kv, hd)
+    return _paged_scores_combine(cfg, env, ad, q_all, k_g, v_g, valid, cdt)
+
+
 def paged_decode_attention(cfg, env: AxisEnv, params: Params, x: jax.Array,
                            pool: Dict[str, jax.Array], pos: jax.Array,
                            table: jax.Array, active: jax.Array, *,
-                           page_size: int):
+                           page_size: int, paged_attn: str = "auto",
+                           valid: Optional[jax.Array] = None):
     """Single-token decode against a paged KV pool.
 
     x (B, d) replicated over tp (B = max_slots, a fixed shape); pos (B,)
     int32 position being written per slot; table (B, n_lp) physical page
     per logical page (0 = unallocated); active (B,) bool.  Writes the new
     token's KV into its page (masked to the owning rank + scratch page for
-    everyone else), gathers the slot's pages, and runs the same
-    (num, den)-psum online softmax as `decode_attention`.  Returns
-    (partial (B, d), pool)."""
+    everyone else), then runs the shared `_paged_attention_core` (same
+    (num, den)-psum online softmax as `decode_attention`; `paged_attn`
+    picks fused-kernel vs gathered).  `valid` is the once-per-tick
+    (B, 1, S_g) mask from `paged_valid_mask` (recomputed here when
+    standalone).  Returns (partial (B, d), pool)."""
     ad = AttnDims.build(cfg, env)
     cdt = jnp.dtype(cfg.compute_dtype)
-    from repro.kernels import ops as kops
     B = x.shape[0]
     hd = ad.head_dim
     n_lp = table.shape[1]
-    ps_loc, S_g, gpos = _paged_geometry(pool, n_lp, page_size, env)
+    ps_loc = pool["k"].shape[1]
     r = env.tp_index()
 
     wq = env.gather_fsdp(params["wq"], 0, dtype=cdt)
@@ -693,11 +767,11 @@ def paged_decode_attention(cfg, env: AxisEnv, params: Params, x: jax.Array,
     pool = _paged_write(pool, k_new, v_new, pos, pp, owns,
                         page_size=page_size, env=env, cdt=cdt)
 
-    k_g = kops.paged_gather(pool["k"], table).reshape(B, S_g, ad.n_kv, hd)
-    v_g = kops.paged_gather(pool["v"], table).reshape(B, S_g, ad.n_kv, hd)
-    pvalid = jnp.repeat(table > 0, ps_loc, axis=1)           # (B, S_g)
-    valid = pvalid & (gpos[None, :] <= pos[:, None])
-    attn = _decode_scores_combine(cfg, env, ad, q_all, k_g, v_g, valid, cdt)
+    if valid is None:
+        valid = paged_valid_mask(table, pos[:, None], page_size=page_size,
+                                 ps_loc=ps_loc, env=env)
+    attn = _paged_attention_core(cfg, env, ad, q_all[:, None], pool, table,
+                                 valid, cdt, paged_attn=paged_attn)[:, 0]
 
     lo = r * ad.local_heads
     local = jax.lax.dynamic_slice_in_dim(attn, lo, ad.local_heads, axis=1)
@@ -708,22 +782,25 @@ def paged_decode_attention(cfg, env: AxisEnv, params: Params, x: jax.Array,
 def paged_prefill_attention(cfg, env: AxisEnv, params: Params, x: jax.Array,
                             pool: Dict[str, jax.Array], base: jax.Array,
                             n_valid: jax.Array, table_row: jax.Array, *,
-                            page_size: int):
+                            page_size: int, paged_attn: str = "auto",
+                            valid: Optional[jax.Array] = None):
     """One chunked-prefill attention step for a single request.
 
     x (C, d) replicated over tp — the chunk's activations; base (scalar)
     tokens already written for this request; n_valid (scalar) real tokens
     in the chunk (the tail is padding); table_row (n_lp,) the request's
     page table.  Writes the chunk's KV into its pages, then each chunk
-    query attends causally over the request's full written history via
-    the page gather.  Returns (partial (C, d), pool)."""
+    query attends causally over the request's full written history
+    through the shared `_paged_attention_core` (the whole chunk is one
+    query batch — the cache view is read once, never per query).
+    `valid` is the once-per-tick (1, C, S_g) mask.  Returns
+    (partial (C, d), pool)."""
     ad = AttnDims.build(cfg, env)
     cdt = jnp.dtype(cfg.compute_dtype)
-    from repro.kernels import ops as kops
     C = x.shape[0]
     hd = ad.head_dim
     n_lp = table_row.shape[0]
-    ps_loc, S_g, gpos = _paged_geometry(pool, n_lp, page_size, env)
+    ps_loc = pool["k"].shape[1]
     r = env.tp_index()
 
     wq = env.gather_fsdp(params["wq"], 0, dtype=cdt)
@@ -749,14 +826,13 @@ def paged_prefill_attention(cfg, env: AxisEnv, params: Params, x: jax.Array,
     pool = _paged_write(pool, k_new, v_new, posq, pp, owns,
                         page_size=page_size, env=env, cdt=cdt)
 
-    k_g = kops.paged_gather(pool["k"], table_row).reshape(S_g, ad.n_kv, hd)
-    v_g = kops.paged_gather(pool["v"], table_row).reshape(S_g, ad.n_kv, hd)
-    pvalid = jnp.repeat(table_row > 0, ps_loc)               # (S_g,)
-    valid = pvalid[None, :] & (gpos[None, :] <= posq[:, None])  # (C, S_g)
-    attn = _decode_scores_combine(
-        cfg, env, ad, q_all,
-        jnp.broadcast_to(k_g, (C,) + k_g.shape),
-        jnp.broadcast_to(v_g, (C,) + v_g.shape), valid, cdt)
+    if valid is None:
+        valid = paged_valid_mask(table_row[None], posq[None],
+                                 page_size=page_size, ps_loc=ps_loc,
+                                 env=env)
+    attn = _paged_attention_core(cfg, env, ad, q_all[None], pool,
+                                 table_row[None], valid, cdt,
+                                 paged_attn=paged_attn)[0]
 
     lo = r * ad.local_heads
     local = jax.lax.dynamic_slice_in_dim(attn, lo, ad.local_heads, axis=1)
@@ -767,7 +843,8 @@ def paged_prefill_attention(cfg, env: AxisEnv, params: Params, x: jax.Array,
 def paged_verify_attention(cfg, env: AxisEnv, params: Params, x: jax.Array,
                            pool: Dict[str, jax.Array], pos: jax.Array,
                            table: jax.Array, active: jax.Array, *,
-                           page_size: int):
+                           page_size: int, paged_attn: str = "auto",
+                           valid: Optional[jax.Array] = None):
     """Speculative-decode verify: Q consecutive tokens per slot in one
     paged-prefill-shaped pass over the slot batch.
 
@@ -775,17 +852,17 @@ def paged_verify_attention(cfg, env: AxisEnv, params: Params, x: jax.Array,
     positions pos[b, 0..Q-1] (consecutive: pos[b, j] = pos[b, 0] + j);
     table (B, n_lp); active (B,).  Writes all B*Q candidate KV rows
     (masked lanes -> scratch page 0), then each query attends causally
-    over its slot's pages with the same `_decode_scores_combine` tail as
-    decode/prefill — so verify logits at a position are the decode
-    logits at that position by construction.  Returns
+    over its slot's pages via `_paged_attention_core` — so verify logits
+    at a position are the decode logits at that position by
+    construction.  `valid` (B, Q, S_g) is the once-per-tick page mask
+    from `paged_valid_mask` (recomputed here when None).  Returns
     (partial (B*Q, d), pool)."""
     ad = AttnDims.build(cfg, env)
     cdt = jnp.dtype(cfg.compute_dtype)
-    from repro.kernels import ops as kops
     B, Q, d = x.shape
     hd = ad.head_dim
     n_lp = table.shape[1]
-    ps_loc, S_g, gpos = _paged_geometry(pool, n_lp, page_size, env)
+    ps_loc = pool["k"].shape[1]
     r = env.tp_index()
 
     wq = env.gather_fsdp(params["wq"], 0, dtype=cdt)
@@ -813,17 +890,13 @@ def paged_verify_attention(cfg, env: AxisEnv, params: Params, x: jax.Array,
                         v_new.reshape(B, Q, ad.n_kv, hd), pos, pp, owns,
                         page_size=page_size, env=env, cdt=cdt)
 
-    k_g = kops.paged_gather(pool["k"], table).reshape(B, S_g, ad.n_kv, hd)
-    v_g = kops.paged_gather(pool["v"], table).reshape(B, S_g, ad.n_kv, hd)
-    pvalid = jnp.repeat(table > 0, ps_loc, axis=1)         # (B, S_g)
-    valid = (pvalid[:, None, :]
-             & (gpos[None, None, :] <= pos[:, :, None]))   # (B, Q, S_g)
-    kb = jnp.broadcast_to(k_g[:, None], (B, Q) + k_g.shape[1:])
-    vb = jnp.broadcast_to(v_g[:, None], (B, Q) + v_g.shape[1:])
-    attn = _decode_scores_combine(
-        cfg, env, ad, q_all, kb.reshape((B * Q,) + k_g.shape[1:]),
-        vb.reshape((B * Q,) + v_g.shape[1:]),
-        valid.reshape(B * Q, S_g), cdt)
+    if valid is None:
+        valid = paged_valid_mask(table, pos, page_size=page_size,
+                                 ps_loc=ps_loc, env=env)
+    attn = _paged_attention_core(
+        cfg, env, ad, q_all.reshape(B, Q, ad.heads_padded, hd), pool,
+        table, valid, cdt,
+        paged_attn=paged_attn).reshape(B * Q, ad.heads_padded, hd)
 
     lo = r * ad.local_heads
     local = jax.lax.dynamic_slice_in_dim(attn, lo, ad.local_heads, axis=1)

@@ -41,6 +41,13 @@ class RunFlags:
     # Threaded through train, prefill AND decode (block_decode), so
     # serving batches exercise the same dispatch path as training.
     moe_dispatch: str = "auto"
+    # "fused" | "gathered" | "auto".  Paged-attention backend for the
+    # serving steps: "fused" walks the page table inside the Pallas
+    # kernel (kernels/paged_attn.py — no gathered KV view in HBM),
+    # "gathered" materializes the view via ops.paged_gather (parity
+    # oracle).  "auto" mirrors moe_dispatch: fused on interpret builds,
+    # gathered on real TPUs until the tile sweep (ROADMAP item 3).
+    paged_attn: str = "auto"
     rwkv_chunk: int = 0                # >0: chunked-parallel WKV6
 
 
@@ -497,15 +504,24 @@ def init_paged_caches(cfg: ModelConfig, env: AxisEnv, n_pages: int,
     return [jax.tree.map(jnp.array, c0) for _ in range(cfg.n_layers)]
 
 
+def _pool_ps_loc(cfg, pools) -> int:
+    """Per-rank page row count of the serve-step pools (uniform pools
+    carry a leading layer dim)."""
+    pool0 = pools["self"] if cfg.uniform_blocks else pools[0]["self"]
+    k = pool0["k"]
+    return k.shape[2] if cfg.uniform_blocks else k.shape[1]
+
+
 def block_decode_paged(cfg, env: AxisEnv, params, x, pool, pos, table,
                        active, *, page_size: int, ffn: str,
-                       flags: RunFlags = DEFAULT_FLAGS):
+                       flags: RunFlags = DEFAULT_FLAGS, valid=None):
     """Paged analogue of `block_decode` ('attn' blocks only): x (B, d)
-    replicated over tp, pool the layer's page pool."""
+    replicated over tp, pool the layer's page pool.  `valid` is the
+    once-per-tick layer-invariant page mask (layers.paged_valid_mask)."""
     h = L.apply_norm(cfg, env, params["norm1"], x)
     partial, pool["self"] = L.paged_decode_attention(
         cfg, env, params["attn"], h, pool["self"], pos, table, active,
-        page_size=page_size)
+        page_size=page_size, paged_attn=flags.paged_attn, valid=valid)
     x = x + env.psum_tp(partial)
 
     h = L.apply_norm(cfg, env, params["norm2"], x)
@@ -526,6 +542,10 @@ def _paged_decode_logits(cfg: ModelConfig, denv: AxisEnv, params, pools,
     """Shared paged-decode body: one token per slot -> (logits, pools)."""
     x = emb.embed_tokens(cfg, denv, params["embed"], token)   # (B, d)
     ffn = _ffn_kind(cfg, cfg.n_layers - 1)
+    # page-validity mask is identical across layers: compute once per
+    # tick here instead of per layer inside the attention entry points.
+    valid = L.paged_valid_mask(table, pos[:, None], page_size=page_size,
+                               ps_loc=_pool_ps_loc(cfg, pools), env=denv)
 
     if cfg.uniform_blocks:
         def body(x, inp):
@@ -533,7 +553,7 @@ def _paged_decode_logits(cfg: ModelConfig, denv: AxisEnv, params, pools,
             x, pool = block_decode_paged(cfg, denv, lp, x, pool, pos,
                                          table, active,
                                          page_size=page_size, ffn=ffn,
-                                         flags=flags)
+                                         flags=flags, valid=valid)
             return x, pool
 
         x, pools = jax.lax.scan(body, x, (params["blocks"], pools))
@@ -542,7 +562,8 @@ def _paged_decode_logits(cfg: ModelConfig, denv: AxisEnv, params, pools,
         for i, lp in enumerate(params["blocks"]):
             x, p = block_decode_paged(cfg, denv, lp, x, pools[i], pos,
                                       table, active, page_size=page_size,
-                                      ffn=_ffn_kind(cfg, i), flags=flags)
+                                      ffn=_ffn_kind(cfg, i), flags=flags,
+                                      valid=valid)
             new_pools.append(p)
         pools = new_pools
     x = L.apply_norm(cfg, denv, params["final_norm"], x)
@@ -628,12 +649,13 @@ def paged_draft_propose(cfg: ModelConfig, env: AxisEnv, params, pools,
 
 def block_verify_paged(cfg, env: AxisEnv, params, x, pool, pos, table,
                        active, *, B: int, Q: int, page_size: int, ffn: str,
-                       flags: RunFlags = DEFAULT_FLAGS):
+                       flags: RunFlags = DEFAULT_FLAGS, valid=None):
     """One layer of the k+1-token verify pass: x (B*Q, d)."""
     h = L.apply_norm(cfg, env, params["norm1"], x)
     partial, pool["self"] = L.paged_verify_attention(
         cfg, env, params["attn"], h.reshape(B, Q, -1), pool["self"], pos,
-        table, active, page_size=page_size)
+        table, active, page_size=page_size, paged_attn=flags.paged_attn,
+        valid=valid)
     x = x + env.psum_tp(partial)
 
     h = L.apply_norm(cfg, env, params["norm2"], x)
@@ -671,13 +693,15 @@ def paged_verify_step(cfg: ModelConfig, env: AxisEnv, params, pools,
 
     x = emb.embed_tokens(cfg, denv, params["embed"], tokens.reshape(-1))
     ffn = _ffn_kind(cfg, cfg.n_layers - 1)
+    valid = L.paged_valid_mask(table, pos, page_size=page_size,
+                               ps_loc=_pool_ps_loc(cfg, pools), env=denv)
     if cfg.uniform_blocks:
         def body(x, inp):
             lp, pool = inp
             x, pool = block_verify_paged(cfg, denv, lp, x, pool, pos,
                                          table, active, B=B, Q=K1,
                                          page_size=page_size, ffn=ffn,
-                                         flags=flags)
+                                         flags=flags, valid=valid)
             return x, pool
 
         x, pools = jax.lax.scan(body, x, (params["blocks"], pools))
@@ -687,7 +711,8 @@ def paged_verify_step(cfg: ModelConfig, env: AxisEnv, params, pools,
             x, p = block_verify_paged(cfg, denv, lp, x, pools[i], pos,
                                       table, active, B=B, Q=K1,
                                       page_size=page_size,
-                                      ffn=_ffn_kind(cfg, i), flags=flags)
+                                      ffn=_ffn_kind(cfg, i), flags=flags,
+                                      valid=valid)
             new_pools.append(p)
         pools = new_pools
     x = L.apply_norm(cfg, denv, params["final_norm"], x)
@@ -736,12 +761,13 @@ def paged_verify_step(cfg: ModelConfig, env: AxisEnv, params, pools,
 
 def block_prefill_paged(cfg, env: AxisEnv, params, x, pool, base, n_valid,
                         table_row, *, page_size: int, ffn: str,
-                        flags: RunFlags = DEFAULT_FLAGS):
+                        flags: RunFlags = DEFAULT_FLAGS, valid=None):
     """One layer of chunked prefill for a single request: x (C, d)."""
     h = L.apply_norm(cfg, env, params["norm1"], x)
     partial, pool["self"] = L.paged_prefill_attention(
         cfg, env, params["attn"], h, pool["self"], base, n_valid,
-        table_row, page_size=page_size)
+        table_row, page_size=page_size, paged_attn=flags.paged_attn,
+        valid=valid)
     x = x + env.psum_tp(partial)
 
     h = L.apply_norm(cfg, env, params["norm2"], x)
@@ -772,6 +798,9 @@ def paged_prefill_chunk(cfg: ModelConfig, env: AxisEnv, params, pools,
     denv = dataclasses.replace(env, seq_parallel=False)
     x = emb.embed_tokens(cfg, denv, params["embed"], tokens)  # (C, d)
     ffn = _ffn_kind(cfg, cfg.n_layers - 1)
+    valid = L.paged_valid_mask(
+        table_row[None], (base + jnp.arange(tokens.shape[0]))[None],
+        page_size=page_size, ps_loc=_pool_ps_loc(cfg, pools), env=denv)
 
     if cfg.uniform_blocks:
         def body(x, inp):
@@ -779,7 +808,7 @@ def paged_prefill_chunk(cfg: ModelConfig, env: AxisEnv, params, pools,
             x, pool = block_prefill_paged(cfg, denv, lp, x, pool, base,
                                           n_valid, table_row,
                                           page_size=page_size, ffn=ffn,
-                                          flags=flags)
+                                          flags=flags, valid=valid)
             return x, pool
 
         x, pools = jax.lax.scan(body, x, (params["blocks"], pools))
@@ -789,7 +818,8 @@ def paged_prefill_chunk(cfg: ModelConfig, env: AxisEnv, params, pools,
             x, p = block_prefill_paged(cfg, denv, lp, x, pools[i], base,
                                        n_valid, table_row,
                                        page_size=page_size,
-                                       ffn=_ffn_kind(cfg, i), flags=flags)
+                                       ffn=_ffn_kind(cfg, i), flags=flags,
+                                       valid=valid)
             new_pools.append(p)
         pools = new_pools
     x = L.apply_norm(cfg, denv, params["final_norm"], x)

@@ -384,6 +384,27 @@ def analyze(compiled, *, model_flops_per_chip: float) -> Roofline:
                         model_flops_per_chip=model_flops_per_chip)
 
 
+def paged_attn_hbm_bytes(slots: int, n_lp: int, pages_touched: int,
+                         page_size: int, kv: int, hd: int,
+                         dtype_bytes: int = 2):
+    """Analytic per-layer HBM KV traffic of the two paged-attention modes.
+
+    "gathered" (`ops.paged_gather`) materializes each slot's FULL
+    table-width view: K and V each read `slots * n_lp * page_size` cache
+    rows from the pool AND write them back as the gathered intermediate
+    — O(B * S_g) regardless of how many pages are actually allocated.
+    "fused" (`kernels/paged_attn.py`) streams only the physical pages the
+    tables reference: K twice (max pass + accumulate pass) and V once
+    (accumulate pass only) — O(pages touched), independent of table
+    width.  Returns (gathered_bytes, fused_bytes).
+    """
+    row = kv * hd * dtype_bytes
+    s_g = n_lp * page_size
+    gathered = 2 * 2 * slots * s_g * row      # k+v, pool read + view write
+    fused = 3 * pages_touched * page_size * row  # k x2 + v x1, streamed
+    return gathered, fused
+
+
 def fmt_seconds(s: float) -> str:
     if s >= 1:
         return f"{s:.2f}s"

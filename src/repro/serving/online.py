@@ -90,6 +90,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import layers as L
 from repro.models import model as M
 from repro.serving.flood import quantize_microbatch
 from repro.serving.segment_cache import PageAllocator
@@ -233,6 +234,10 @@ class OnlineEngine:
         self.cfg = cfg
         self.runner = runner
         self.params = params
+        # resolved paged-attention backend (RunFlags.paged_attn "auto"
+        # settles at engine build time) — surfaced in load reports so a
+        # bench row records which path it measured
+        self.paged_attn = L.resolve_paged_attn(runner.flags.paged_attn)
         self.alloc = PageAllocator(n_pages, cfg.page_size)
         self.pools = runner.init_paged_pools(n_pages, cfg.page_size)
 
@@ -945,6 +950,7 @@ def run_poisson_load(engine: OnlineEngine, *, rate: float, n_requests: int,
         "max_new": max_new,
         "policy": engine.policy,
         "radix_cache": engine.cfg.radix_cache,
+        "paged_attn": engine.paged_attn,
         "wall_s": t_end - t0,
         "tokens_out": n_tokens,
         "tok_s": n_tokens / max(t_end - t0, 1e-9),
