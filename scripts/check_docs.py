@@ -15,6 +15,10 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+# pages that must exist (a deleted/renamed doc is an error even though
+# DOC_FILES globs whatever is present)
+REQUIRED_PAGES = ("architecture.md", "kernels.md", "training.md",
+                  "serving.md", "analysis.md")
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 
 
@@ -27,6 +31,9 @@ def internal_links(md: Path):
 
 def check_links() -> list:
     errors = []
+    for page in REQUIRED_PAGES:
+        if not (ROOT / "docs" / page).exists():
+            errors.append(f"missing required doc page: docs/{page}")
     for md in DOC_FILES:
         if not md.exists():
             errors.append(f"missing doc file: {md.relative_to(ROOT)}")

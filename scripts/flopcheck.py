@@ -1,0 +1,65 @@
+#!/usr/bin/env python
+"""Run the flopcheck static-analysis pass over the tree.
+
+Usage:
+    python scripts/flopcheck.py [--strict] [paths...]
+
+Defaults to `src tests`.  Exit status is non-zero when any unsuppressed
+violation is found; `--strict` also prints suppressed violations so the
+suppression inventory stays reviewable.  `tests/flopcheck_corpus/` is
+always excluded — it holds deliberately-bad fixtures for the rule unit
+tests.
+
+Mirrors scripts/check_docs.py: stdlib-only apart from the repo itself,
+runnable from the repo root with no PYTHONPATH gymnastics.
+"""
+import argparse
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.analysis import check_paths  # noqa: E402
+
+EXCLUDE = ("flopcheck_corpus",)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="*", default=["src", "tests"],
+                    help="files or directories to check (default: src tests)")
+    ap.add_argument("--strict", action="store_true",
+                    help="also list suppressed violations")
+    args = ap.parse_args()
+
+    paths = [ROOT / p if not Path(p).is_absolute() else Path(p)
+             for p in (args.paths or ["src", "tests"])]
+    missing = [p for p in paths if not p.exists()]
+    if missing:
+        print(f"flopcheck: no such path: {missing}", file=sys.stderr)
+        return 2
+
+    violations = check_paths(paths, exclude=EXCLUDE)
+    active = [v for v in violations if not v.suppressed]
+    suppressed = [v for v in violations if v.suppressed]
+
+    for v in active:
+        print(v.format())
+    if args.strict and suppressed:
+        print(f"-- {len(suppressed)} suppressed "
+              f"(reviewed, `# flopcheck: disable=` on site):")
+        for v in suppressed:
+            print(f"   {v.format()}")
+
+    if active:
+        print(f"\nflopcheck: {len(active)} violation(s) "
+              f"({len(suppressed)} suppressed)")
+        return 1
+    print(f"flopcheck: OK — 0 violations ({len(suppressed)} suppressed) "
+          f"across {len(args.paths or ['src', 'tests'])} path(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

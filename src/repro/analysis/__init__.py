@@ -1,0 +1,33 @@
+"""Static analysis + runtime tracing contracts for the JAX/Pallas hot paths.
+
+Two halves, one goal — the paper's "every FLOP counts" discipline held
+mechanically instead of re-discovered per PR:
+
+* `flopcheck` — an AST linter with repo-specific rules (hidden per-step
+  host syncs, recompile hazards, Pallas tracing pitfalls, donated-buffer
+  reuse, unlocked shared state, removed jax APIs).  Run it with
+  ``python scripts/flopcheck.py --strict`` or call `check_paths`.
+* `contracts` — runtime guards the engines and tier-1 tests share:
+  `CompileCounter`/`compile_guard` (the one place the 1-prefill/1-decode
+  /1-draft/1-verify and one-compile-per-warmup-stage invariants live),
+  `transfer_guard` (jax transfer-guard wrapper for the hot loops), and
+  `donation_check` (donated buffers really were consumed).
+
+See docs/analysis.md for the rule catalog and the historical bug each
+rule would have caught.
+"""
+from repro.analysis.flopcheck import (  # noqa: F401
+    RULES,
+    Violation,
+    check_file,
+    check_paths,
+    check_source,
+)
+from repro.analysis.contracts import (  # noqa: F401
+    CompileCounter,
+    CompileGuardError,
+    DonationError,
+    compile_guard,
+    donation_check,
+    transfer_guard,
+)

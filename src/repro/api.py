@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.analysis import contracts
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core import spikes as spikes_lib
 from repro.models import model as M
@@ -502,9 +503,11 @@ class StagedTrainStep:
     differs only in the length of the accumulation scan, so one jitted
     function per *distinct* stage suffices for the whole warmup.  Steps
     are built lazily by `for_accum` and reused across stage revisits
-    (e.g. after a mid-warmup checkpoint restore).  `trace_counts` records
-    how many times each stage's python step was traced — equal to its
-    XLA compile count, asserted ≤ 1 per stage by the engine tests.
+    (e.g. after a mid-warmup checkpoint restore).  `compiles` is a
+    contracts.CompileCounter keyed by ``"accum<N>"`` — each label's
+    count equals that stage's XLA compile count, asserted == 1 per
+    visited stage via contracts.compile_guard; `trace_counts` keeps the
+    historical `{accum: count}` view.
     """
 
     def __init__(self, runner: "Runner", micro_batch: int,
@@ -519,7 +522,7 @@ class StagedTrainStep:
         self.stages = stages
         self.spike_guard = spike_guard
         self.donate = donate
-        self.trace_counts: Dict[int, int] = {}
+        self.compiles = contracts.CompileCounter()
         self._fns: Dict[int, Any] = {}
 
     def for_accum(self, accum: int):
@@ -538,21 +541,21 @@ class StagedTrainStep:
         raw = self.runner.make_train_step(
             self.micro_batch, self.opt_cfg, accum_steps=accum,
             spike_guard=self.spike_guard)
-        counts = self.trace_counts
+        donate = () if not self.donate else (
+            (0, 1, 2) if self.spike_guard is not None else (0, 1))
+        return self.compiles.jit(f"accum{accum}", raw,
+                                 donate_argnums=donate)
 
-        def step_fn(*args):
-            counts[accum] = counts.get(accum, 0) + 1   # runs at trace time
-            return raw(*args)
-
-        step_fn.__name__ = f"train_step_accum{accum}"
-        if not self.donate:
-            return jax.jit(step_fn)
-        return jax.jit(step_fn, donate_argnums=(0, 1, 2)
-                       if self.spike_guard is not None else (0, 1))
+    @property
+    def trace_counts(self) -> Dict[int, int]:
+        """Historical `{accum: traces}` view over the CompileCounter
+        (labels `accum<N>`), nonzero entries only."""
+        return {int(label[5:]): n
+                for label, n in self.compiles.counts.items() if n}
 
     @property
     def n_compiles(self) -> int:
-        return sum(self.trace_counts.values())
+        return self.compiles.total()
 
     def __call__(self, accum: int, *args):
         return self.for_accum(accum)(*args)

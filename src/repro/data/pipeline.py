@@ -341,6 +341,9 @@ class Prefetcher:
     def stop(self):
         """Blocks until the producer thread has fully exited — callers
         (e.g. Trainer.restore) mutate the pipeline right after."""
-        self._stop = True
+        # deliberately lock-free: a GIL-atomic bool flip the worker polls;
+        # taking self.lock here could deadlock against a producer blocked
+        # inside the locked produce section
+        self._stop = True          # flopcheck: disable=FC-LOCK
         self._space.release()      # unblock the worker
         self._thread.join()

@@ -65,6 +65,13 @@ class InvSqrtAnnealing:
         lr = self.lr_start / jnp.sqrt(1.0 + a * step)
         return jnp.maximum(lr, self.lr_end)
 
+    def host(self, step: int) -> float:
+        """Pure-host evaluation (same contract as WSDSchedule.host): the
+        trainer evaluates the schedule per step before dispatch, and a
+        jnp evaluation there is a hidden per-step device sync."""
+        a = ((self.lr_start / self.lr_end) ** 2 - 1.0) / max(self.steps, 1)
+        return max(self.lr_start / math.sqrt(1.0 + a * step), self.lr_end)
+
 
 @dataclasses.dataclass(frozen=True)
 class BatchSizeWarmup:

@@ -81,6 +81,7 @@ rate, per-request TTFT / inter-token latency / throughput percentiles —
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from collections import deque
@@ -90,6 +91,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import contracts
 from repro.models import layers as L
 from repro.models import model as M
 from repro.serving.flood import quantize_microbatch
@@ -146,6 +148,10 @@ class OnlineConfig:
     max_queue: Optional[int] = None     # bounded arrival queue (None = inf)
     overload: str = "defer"             # queue-full response: defer | shed
     tenant_budgets: Optional[Dict[str, int]] = None
+    # debug contracts (analysis.contracts): run every tick under a
+    # device->host transfer_guard.  Default comes from REPRO_DEBUG_GUARDS
+    # so CI legs can arm it without touching call sites.  None = env.
+    debug_guards: Optional[bool] = None
 
     @property
     def max_pages(self) -> int:
@@ -267,10 +273,14 @@ class OnlineEngine:
         else:
             self.drunner = self.dparams = self.dpools = None
 
-        self.prefill_traces = 0
-        self.decode_traces = 0
-        self.draft_traces = 0
-        self.verify_traces = 0
+        # trace-time compile counting (analysis.contracts.CompileCounter):
+        # the engine contract — exactly one compile per step family across
+        # arbitrary churn — is asserted with contracts.compile_guard()
+        # over these labels; prefill_traces/... stay as properties
+        self.compiles = contracts.CompileCounter()
+        self.debug_guards = (contracts.env_debug_guards()
+                             if cfg.debug_guards is None
+                             else cfg.debug_guards)
         self.spec_proposed = 0        # drafted tokens offered to verify
         self.spec_accepted = 0        # drafted tokens accepted
         # the engine always runs the *sampled* step variants — knobs are
@@ -279,14 +289,9 @@ class OnlineEngine:
         raw_dec = runner.make_paged_decode_step(cfg.page_size, sample=True)
         raw_pre = runner.make_paged_prefill(cfg.page_size, sample=True)
 
-        def dec_fn(params, pools, tok, pos, table, active, seeds, temp,
-                   top_p, top_k):
-            self.decode_traces += 1        # runs at trace time
-            return raw_dec(params, pools, tok, pos, table, active, seeds,
-                           temp, top_p, top_k)
-
         donate = cfg.donate
-        self._decode = jax.jit(dec_fn, donate_argnums=(1,) if donate else ())
+        self._decode = self.compiles.jit(
+            "decode", raw_dec, donate_argnums=(1,) if donate else ())
 
         if self.spec:
             # fused prefill: one jitted step writes the chunk into BOTH
@@ -298,46 +303,27 @@ class OnlineEngine:
 
             def pre_fn(params, dparams, pools, dpools, tokens, base,
                        n_valid, table_row, seed, temp, top_p, top_k):
-                self.prefill_traces += 1   # runs at trace time
                 nxt, pools = raw_pre(params, pools, tokens, base, n_valid,
                                      table_row, seed, temp, top_p, top_k)
                 _, dpools = raw_dpre(dparams, dpools, tokens, base,
                                      n_valid, table_row)
                 return nxt, pools, dpools
 
-            self._prefill = jax.jit(
-                pre_fn, donate_argnums=(2, 3) if donate else ())
+            self._prefill = self.compiles.jit(
+                "prefill", pre_fn, donate_argnums=(2, 3) if donate else ())
 
             raw_draft = self.drunner.make_paged_draft_propose(
                 cfg.page_size, cfg.spec_k)
             raw_verify = runner.make_paged_verify_step(
                 cfg.page_size, cfg.spec_k)
 
-            def draft_fn(dparams, dpools, tok, pos0, table, active, seeds,
-                         temp, top_p, top_k):
-                self.draft_traces += 1     # runs at trace time
-                return raw_draft(dparams, dpools, tok, pos0, table, active,
-                                 seeds, temp, top_p, top_k)
-
-            def verify_fn(params, pools, tokens, pos0, table, active,
-                          dprobs, seeds, temp, top_p, top_k):
-                self.verify_traces += 1    # runs at trace time
-                return raw_verify(params, pools, tokens, pos0, table,
-                                  active, dprobs, seeds, temp, top_p, top_k)
-
-            self._draft = jax.jit(
-                draft_fn, donate_argnums=(1,) if donate else ())
-            self._verify = jax.jit(
-                verify_fn, donate_argnums=(1,) if donate else ())
+            self._draft = self.compiles.jit(
+                "draft", raw_draft, donate_argnums=(1,) if donate else ())
+            self._verify = self.compiles.jit(
+                "verify", raw_verify, donate_argnums=(1,) if donate else ())
         else:
-            def pre_fn(params, pools, tokens, base, n_valid, table_row,
-                       seed, temp, top_p, top_k):
-                self.prefill_traces += 1   # runs at trace time
-                return raw_pre(params, pools, tokens, base, n_valid,
-                               table_row, seed, temp, top_p, top_k)
-
-            self._prefill = jax.jit(
-                pre_fn, donate_argnums=(1,) if donate else ())
+            self._prefill = self.compiles.jit(
+                "prefill", raw_pre, donate_argnums=(1,) if donate else ())
 
         # host-side slot state (device copies are cut fresh every call —
         # same shapes/dtypes, so never a recompile)
@@ -788,6 +774,25 @@ class OnlineEngine:
         return done
 
     # -- driver ---------------------------------------------------------------
+    # compile-count views over the shared CompileCounter (the names the
+    # tests/benches have always used; the counter itself is the API for
+    # contracts.compile_guard)
+    @property
+    def prefill_traces(self) -> int:
+        return self.compiles["prefill"]
+
+    @property
+    def decode_traces(self) -> int:
+        return self.compiles["decode"]
+
+    @property
+    def draft_traces(self) -> int:
+        return self.compiles["draft"]
+
+    @property
+    def verify_traces(self) -> int:
+        return self.compiles["verify"]
+
     @property
     def idle(self) -> bool:
         return not self.queue and not self._busy_slots()
@@ -811,18 +816,28 @@ class OnlineEngine:
         never recompiles."""
         now = time.perf_counter() if now is None else now
         self.ticks += 1
-        self._admit(now)
-        step = self._spec_tick if self.spec else self._decode_tick
-        if self.policy == "decode-priority":
-            step(now)
-            self._prefill_tick(now)
-        elif self.policy == "prefill-priority":
-            while self._prefill_tick(now):
-                pass
-            step(now)
-        else:                            # fcfs
-            self._prefill_tick(now)
-            step(now)
+        with self._tick_guard():
+            self._admit(now)
+            step = self._spec_tick if self.spec else self._decode_tick
+            if self.policy == "decode-priority":
+                step(now)
+                self._prefill_tick(now)
+            elif self.policy == "prefill-priority":
+                while self._prefill_tick(now):
+                    pass
+                step(now)
+            else:                            # fcfs
+                self._prefill_tick(now)
+                step(now)
+
+    def _tick_guard(self):
+        """debug_guards mode: the whole tick runs under a device->host
+        transfer_guard, so any sync the engine did not announce with an
+        explicit jax.device_get is an error on guarded backends (TPU/GPU
+        — the CPU backend never fires transfer guards)."""
+        if self.debug_guards:
+            return contracts.transfer_guard("disallow")
+        return contextlib.nullcontext()
 
     def run(self, max_ticks: int = 100_000):
         """Drive ticks until every submitted request is done."""

@@ -31,6 +31,7 @@ idealized synchronous loop.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import itertools
 from typing import Any, Dict, List, Optional
@@ -41,6 +42,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import api, sharding
+from repro.analysis import contracts
 from repro.core import spikes as spikes_lib
 from repro.core.spikes import SpikeConfig, SpikeDetector
 from repro.data.pipeline import DataPipeline, Prefetcher
@@ -66,6 +68,10 @@ class TrainConfig:
     checkpoint_every: int = 0          # 0 = off
     checkpoint_dir: Optional[str] = None
     seed: int = 0
+    # run every step under contracts.transfer_guard so any implicit
+    # device->host sync inside the hot loop raises (docs/analysis.md);
+    # None = read the REPRO_DEBUG_GUARDS env var
+    debug_guards: Optional[bool] = None
 
 
 class Trainer:
@@ -76,6 +82,9 @@ class Trainer:
         self.cfg = cfg
         self.timer = timer or XPUTimer()
         self.detector = SpikeDetector(cfg.spike)
+        self.debug_guards = (contracts.env_debug_guards()
+                             if cfg.debug_guards is None
+                             else cfg.debug_guards)
         if cfg.bs_warmup is not None:
             # §3.4.1 batch-size warmup through the accumulation dim: the
             # microbatch shape is pinned to the pipeline's batch_size and
@@ -159,9 +168,18 @@ class Trainer:
                 batch = self._prefetcher.get()
                 jbatch = {k: jnp.asarray(v) for k, v in batch.items()}
             sched = cfg.lr_schedule
-            lr = (sched.host(i) if hasattr(sched, "host")
-                  else float(sched(i))) * self.detector.lr_scale_for(i)
-            with self.timer.span("step"):
+            # PR-4 regression (FC-HOSTSYNC): float(sched(i)) here would
+            # evaluate a jnp schedule on device and block the async
+            # dispatch pipeline every step — schedules must expose a
+            # host-side evaluator
+            host_lr = getattr(sched, "host", None)
+            if host_lr is None:
+                raise TypeError(
+                    f"{type(sched).__name__} has no .host(step) — LR "
+                    f"schedules used by Trainer must evaluate host-side "
+                    f"(see optim/schedule.py)")
+            lr = host_lr(i) * self.detector.lr_scale_for(i)
+            with self.timer.span("step"), self._step_guard():
                 # async dispatch: no host sync here — the device decides
                 # commit/discard itself, metrics stay on device.
                 (self.params, self.opt_state, self.guard_state,
@@ -184,6 +202,13 @@ class Trainer:
                     self.save(f"step_{self.step}")
         return self.history
 
+    def _step_guard(self):
+        """Armed (debug_guards) the step dispatch runs under a d2h
+        transfer guard: metrics must stay on device until `_drain`."""
+        if self.debug_guards:
+            return contracts.transfer_guard("disallow")
+        return contextlib.nullcontext()
+
     # -- async metrics drain ---------------------------------------------------
     def _drain(self):
         """One host transfer for every pending step's metrics; feeds the
@@ -191,13 +216,18 @@ class Trainer:
         if not self._pending:
             return
         with self.timer.span("drain"):
-            host = jax.device_get([m for _, _, m, _, _ in self._pending])
+            # one device_get for the whole window, converted to python
+            # floats at the boundary — nothing downstream touches device
+            # values (FC-HOSTSYNC stays structurally impossible below)
+            host = [{k: float(v) for k, v in m.items()}
+                    for m in jax.device_get(
+                        [m for _, _, m, _, _ in self._pending])]
         self.metric_drains += 1
         self.timer.count("metric_drain")
         n_commit = 0
         for (i, lr, _, accum, batch), mh in zip(self._pending, host):
-            loss = float(mh["loss"])
-            committed = bool(mh.get("commit", 1.0) >= 0.5)
+            loss = mh["loss"]
+            committed = mh.get("commit", 1.0) >= 0.5
             # the batch payload lives only in the pipeline's retry lane —
             # the detector records the event, not the data (a second copy
             # would grow without bound and bloat every host checkpoint)
@@ -212,7 +242,7 @@ class Trainer:
                 self.timer.count("spike_skipped")
             rec = {"step": i, "loss": loss, "lr": lr,
                    "skipped": not committed,
-                   **{k: float(v) for k, v in mh.items()
+                   **{k: v for k, v in mh.items()
                       if k not in ("loss", "commit")}}
             self.history.append(rec)
             if self.cfg.log_every and i % self.cfg.log_every == 0:

@@ -1,0 +1,24 @@
+"""FC-DEPRECATED fixtures: removed jax APIs."""
+import functools
+
+import jax
+
+
+def bad_tree_map(fn, tree):
+    return jax.tree_map(fn, tree)  # EXPECT: FC-DEPRECATED
+
+
+def bad_tree_map_reference(fn):
+    return functools.partial(jax.tree_map, fn)  # EXPECT: FC-DEPRECATED
+
+
+def bad_tree_flatten(tree):
+    return jax.tree_flatten(tree)  # EXPECT: FC-DEPRECATED
+
+
+def good_tree_map(fn, tree):
+    return jax.tree.map(fn, tree)
+
+
+def good_tree_util(fn, tree):
+    return jax.tree_util.tree_map(fn, tree)

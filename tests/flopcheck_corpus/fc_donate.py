@@ -1,0 +1,33 @@
+"""FC-DONATE fixtures: donated-buffer reuse after the donating call."""
+import jax
+
+train_step = jax.jit(lambda p, o, b: (p, o), donate_argnums=(0, 1))
+maybe_step = jax.jit(lambda p, o, b: (p, o),
+                     donate_argnums=(0, 1) if True else ())
+
+
+def bad_read_after_donate(params, opt, batch):
+    new_p, new_o = train_step(params, opt, batch)
+    drift = params  # EXPECT: FC-DONATE
+    return new_p, new_o, drift
+
+
+def bad_read_after_donate_ifexp(params, opt, batch):
+    new_p, new_o = maybe_step(params, opt, batch)
+    return new_p, new_o, opt  # EXPECT: FC-DONATE
+
+
+def good_rebind(params, opt, batch):
+    params, opt = train_step(params, opt, batch)
+    return params, opt
+
+
+def good_fresh_names(params, opt, batches):
+    for b in batches:
+        params, opt = train_step(params, opt, b)
+    return params, opt
+
+
+def good_non_donated_arg(params, opt, batch):
+    new_p, new_o = train_step(params, opt, batch)
+    return new_p, new_o, batch         # batch was not donated

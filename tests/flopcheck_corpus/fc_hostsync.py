@@ -1,0 +1,75 @@
+"""FC-HOSTSYNC fixtures: per-step host syncs on jitted-step outputs.
+
+The bad shapes reproduce real history: the per-step metric conversion
+PR 3 designed away, and the PR-4 hidden LR sync (`float(sched(i))` in
+the Trainer hot loop).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+step = jax.jit(lambda p, b: (p, {"loss": jnp.sum(b)}))
+
+
+def bad_float_per_step(params, batches):
+    losses = []
+    for b in batches:
+        params, metrics = step(params, b)
+        losses.append(float(metrics["loss"]))  # EXPECT: FC-HOSTSYNC
+    return losses
+
+
+def bad_item_per_step(params, batches):
+    out = []
+    for b in batches:
+        params, metrics = step(params, b)
+        out.append(metrics["loss"].item())  # EXPECT: FC-HOSTSYNC
+    return out
+
+
+def bad_asarray_per_step(params, batches):
+    toks = []
+    for b in batches:
+        tok, _ = step(params, b)
+        toks.append(np.asarray(tok))  # EXPECT: FC-HOSTSYNC
+    return toks
+
+
+class Trainer:
+    """The PR-4 regression: eager LR evaluation in the per-step loop."""
+
+    def __init__(self, sched, step_fn):
+        self.sched = sched
+        self.step_fn = step_fn
+        self.params = None
+
+    def train(self, n_steps):
+        for i in range(n_steps):
+            lr = float(self.sched(i))  # EXPECT: FC-HOSTSYNC
+            self.params = self.step_fn(self.params, lr)
+
+    def train_host_side(self, n_steps):
+        for i in range(n_steps):
+            lr = float(self.sched.host(i))     # host eval: fine
+            self.params = self.step_fn(self.params, lr)
+
+
+def good_batched_drain(params, batches):
+    pending = []
+    for b in batches:
+        params, metrics = step(params, b)
+        pending.append(metrics)                # stays on device
+    return [float(m["loss"]) for m in jax.device_get(pending)]
+
+
+def good_explicit_device_get(params, batches):
+    out = []
+    for b in batches:
+        tok, _ = step(params, b)
+        out.append(int(jax.device_get(tok)))   # announced transfer: fine
+    return out
+
+
+def good_outside_loop(params, batch):
+    params, metrics = step(params, batch)
+    return float(metrics["loss"])              # one-off, not per-step

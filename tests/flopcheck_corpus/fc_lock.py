@@ -1,0 +1,45 @@
+"""FC-LOCK fixtures: guarded attributes written without the lock.
+
+`Pipeline.set_mixture` reproduces the PR-4 DataPipeline race: a public
+method mutating state the rest of the class only touches under its
+RLock.
+"""
+import threading
+
+
+class Pipeline:
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._q = []
+        self._mix = {}
+        self.seed = 0                  # never lock-guarded anywhere
+
+    def push(self, item):
+        with self._lock:
+            self._q.append(item)
+
+    def set_mixture(self, mix):
+        self._mix = mix  # EXPECT: FC-LOCK
+
+    def drop(self, item):
+        self._q.remove(item)  # EXPECT: FC-LOCK
+
+    def snapshot(self):
+        with self._lock:
+            return list(self._q), dict(self._mix)
+
+    def set_seed(self, seed):
+        self.seed = seed               # unguarded attr: fine
+
+    def _fill(self, item):
+        self._q.append(item)           # private helper: assumed locked
+
+
+class NoLock:
+    """No lock attr at all: the rule never applies."""
+
+    def __init__(self):
+        self.items = []
+
+    def add(self, x):
+        self.items.append(x)

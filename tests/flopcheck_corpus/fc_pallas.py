@@ -1,0 +1,52 @@
+"""FC-PALLAS fixtures: kernel tracing pitfalls.
+
+`bad_when_kernel` reproduces the PR-1 bug verbatim: `pl.program_id`
+read inside a `pl.when` region, where the interpret-mode evaluator does
+not substitute it.
+"""
+import time
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def bad_when_kernel(o_ref):
+    @pl.when(pl.program_id(0) == 0)    # condition evaluates outside: fine
+    def _():
+        k = pl.program_id(2)  # EXPECT: FC-PALLAS
+        o_ref[...] = k
+
+
+def bad_print_kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+    print("tracing block", i)  # EXPECT: FC-PALLAS
+    o_ref[...] = x_ref[...]
+
+
+def bad_timed_kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+    t0 = time.time()  # EXPECT: FC-PALLAS
+    o_ref[i] = x_ref[i] * t0
+
+
+def bad_call_no_interpret(x, shape):
+    return pl.pallas_call(bad_print_kernel, out_shape=shape)(x)  # EXPECT: FC-PALLAS
+
+
+def good_kernel(o_ref):
+    k = pl.program_id(2)               # read at the top level
+
+    @pl.when(k == 0)
+    def _():
+        o_ref[...] = k                 # closes over the value: fine
+
+
+def good_debug_print_kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+    pl.debug_print("block {}", i)      # the sanctioned debug channel
+    o_ref[...] = x_ref[...]
+
+
+def good_call(x, shape, interpret=False):
+    return pl.pallas_call(good_kernel, out_shape=shape,
+                          interpret=interpret)(x)

@@ -1,0 +1,65 @@
+"""FC-RECOMPILE fixtures: compile-cache-defeating call patterns."""
+import dataclasses
+import functools
+
+import jax
+
+matmul = jax.jit(lambda x, block: x, static_argnums=(1,))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk"))
+def tiled(x, bm, bk=8):
+    return x
+
+
+@dataclasses.dataclass
+class MutableTile:          # no frozen/__hash__: unhashable instances
+    bm: int = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class FrozenTile:
+    bm: int = 8
+
+
+def bad_jit_in_loop(fns, x):
+    out = []
+    for f in fns:
+        jf = jax.jit(f)  # EXPECT: FC-RECOMPILE
+        out.append(jf(x))
+    return out
+
+
+def bad_static_list(x):
+    return matmul(x, [8, 8])  # EXPECT: FC-RECOMPILE
+
+
+def bad_static_lambda(x):
+    return tiled(x, bm=lambda: 8)  # EXPECT: FC-RECOMPILE
+
+
+def bad_static_positional_dict(x):
+    return tiled(x, {"bm": 8})  # EXPECT: FC-RECOMPILE
+
+
+def bad_static_dataclass(x):
+    return tiled(x, bm=MutableTile())  # EXPECT: FC-RECOMPILE
+
+
+def good_static_frozen(x):
+    return tiled(x, bm=FrozenTile())   # hashable: caches fine
+
+
+def good_static_scalar(x):
+    return tiled(x, bm=128, bk=16)
+
+
+def good_handle_table(stages):
+    # bounded handle table built once, before the hot loop — the repo
+    # idiom (StagedTrainStep); comprehensions do not count as loops here
+    return {a: jax.jit(lambda x: x) for a in stages}
+
+
+def good_jit_outside_loop(f, xs):
+    jf = jax.jit(f)
+    return [jf(x) for x in xs]

@@ -1,0 +1,30 @@
+"""Suppression-syntax fixtures: every violation here is disabled with an
+explicit `# flopcheck: disable=` comment (inline and standalone forms),
+so the file reports suppressed findings only."""
+import jax
+
+step = jax.jit(lambda p, b: (p, b))
+
+
+def inline_suppressed(params, batches):
+    out = []
+    for b in batches:
+        params, m = step(params, b)
+        out.append(float(m))  # flopcheck: disable=FC-HOSTSYNC
+    return out
+
+
+def standalone_suppressed(params, batches):
+    out = []
+    for b in batches:
+        params, m = step(params, b)
+        # flopcheck: disable=FC-HOSTSYNC
+        out.append(float(m))
+    return out
+
+
+def multi_rule_suppressed(fns, x):
+    for f in fns:
+        jf = jax.jit(f)  # flopcheck: disable=FC-RECOMPILE,FC-HOSTSYNC
+        x = jf(x)
+    return x

@@ -1,0 +1,211 @@
+"""flopcheck rule tests: exact (line, rule) matches over the fixture
+corpus, suppression semantics, the cross-file registry, the historical
+regression snippets the tool exists for, and a clean-tree gate."""
+import re
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import RULES, check_paths, check_source
+from repro.analysis.flopcheck import (
+    build_registry, check_file, iter_py_files,
+)
+
+HERE = Path(__file__).resolve().parent
+ROOT = HERE.parent
+CORPUS = HERE / "flopcheck_corpus"
+EXPECT_RE = re.compile(r"#\s*EXPECT:\s*(FC-[A-Z]+)")
+CORPUS_FILES = sorted(CORPUS.glob("fc_*.py"))
+
+
+def expected_marks(path: Path):
+    out = set()
+    for i, line in enumerate(path.read_text().splitlines(), 1):
+        m = EXPECT_RE.search(line)
+        if m:
+            out.add((i, m.group(1)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# corpus: exact line + rule-ID matches, positives and negatives together
+# ---------------------------------------------------------------------------
+
+
+def test_corpus_covers_every_rule():
+    marked = {r for p in CORPUS_FILES for _, r in expected_marks(p)}
+    assert marked == set(RULES), (
+        f"corpus is missing positive fixtures for "
+        f"{set(RULES) - marked or set()}")
+
+
+@pytest.mark.parametrize("path", CORPUS_FILES, ids=lambda p: p.stem)
+def test_corpus_exact_lines(path):
+    got = {(v.line, v.rule) for v in check_file(path) if not v.suppressed}
+    assert got == expected_marks(path)
+
+
+# ---------------------------------------------------------------------------
+# suppression syntax
+# ---------------------------------------------------------------------------
+
+
+def test_suppressions_inline_standalone_and_multi_rule():
+    vs = check_file(CORPUS / "suppressions.py")
+    assert vs, "fixtures should still be detected"
+    assert all(v.suppressed for v in vs), \
+        [v.format() for v in vs if not v.suppressed]
+    # both comment placements worked
+    assert sum(v.rule == "FC-HOSTSYNC" for v in vs) >= 2
+    assert any(v.rule == "FC-RECOMPILE" for v in vs)
+
+
+def test_disable_file_suppresses_everywhere():
+    src = textwrap.dedent("""
+        # flopcheck: disable-file=FC-DEPRECATED
+        import jax
+
+        def f(fn, tree):
+            return jax.tree_map(fn, tree)
+
+        def g(fn, tree):
+            return jax.tree_map(fn, tree)
+    """)
+    vs = check_source(src)
+    assert len(vs) == 2 and all(v.suppressed for v in vs)
+
+
+def test_unsuppressed_rule_still_fires_next_to_suppressed_one():
+    src = textwrap.dedent("""
+        import jax
+
+        def f(fn, tree):
+            a = jax.tree_map(fn, tree)  # flopcheck: disable=FC-DEPRECATED
+            b = jax.tree_map(fn, tree)
+            return a, b
+    """)
+    vs = check_source(src)
+    assert [v.suppressed for v in sorted(vs, key=lambda v: v.line)] \
+        == [True, False]
+
+
+# ---------------------------------------------------------------------------
+# cross-file registry: static-arg'd jit in one file, call site in another
+# ---------------------------------------------------------------------------
+
+
+def test_cross_file_static_argnames(tmp_path):
+    (tmp_path / "kernels.py").write_text(textwrap.dedent("""
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("bm",))
+        def tiled(x, bm):
+            return x
+    """))
+    (tmp_path / "caller.py").write_text(textwrap.dedent("""
+        from kernels import tiled
+
+        def run(x):
+            return tiled(x, bm=[8, 8])
+    """))
+    vs = [v for v in check_paths([tmp_path]) if not v.suppressed]
+    assert [(Path(v.path).name, v.rule) for v in vs] \
+        == [("caller.py", "FC-RECOMPILE")]
+
+
+def test_unhashable_dataclass_across_files(tmp_path):
+    (tmp_path / "tiles.py").write_text(textwrap.dedent("""
+        import dataclasses
+
+        @dataclasses.dataclass
+        class Tile:
+            bm: int = 8
+    """))
+    (tmp_path / "caller.py").write_text(textwrap.dedent("""
+        import functools
+        import jax
+        from tiles import Tile
+
+        @functools.partial(jax.jit, static_argnames=("tile",))
+        def run(x, tile):
+            return x
+
+        def go(x):
+            return run(x, tile=Tile())
+    """))
+    vs = [v for v in check_paths([tmp_path]) if not v.suppressed]
+    assert len(vs) == 1 and vs[0].rule == "FC-RECOMPILE"
+    assert "Tile" in vs[0].message
+
+
+# ---------------------------------------------------------------------------
+# the three historical bugs (acceptance criteria): each reintroduction
+# must flag with the matching rule ID
+# ---------------------------------------------------------------------------
+
+
+def test_pr1_program_id_in_pl_when_flags():
+    src = textwrap.dedent("""
+        from jax.experimental import pallas as pl
+
+        def kernel(acc_ref, o_ref):
+            @pl.when(pl.program_id(2) == 0)
+            def _():
+                acc_ref[...] = acc_ref[...] * pl.program_id(2)
+    """)
+    vs = [v for v in check_source(src) if not v.suppressed]
+    assert [v.rule for v in vs] == ["FC-PALLAS"]
+    assert vs[0].line == 7          # only the read INSIDE the region
+
+
+def test_pr4_eager_lr_sync_flags():
+    src = textwrap.dedent("""
+        class Trainer:
+            def train(self, n_steps):
+                for i in range(n_steps):
+                    lr = float(self.cfg.lr_schedule(i))
+                    self.dispatch(i, lr)
+    """)
+    vs = [v for v in check_source(src) if not v.suppressed]
+    assert [v.rule for v in vs] == ["FC-HOSTSYNC"]
+
+
+def test_pr4_unlocked_pipeline_write_flags():
+    src = textwrap.dedent("""
+        import threading
+
+        class DataPipeline:
+            def __init__(self):
+                self._lock = threading.RLock()
+                self._mixture = {}
+
+            def set_mixture(self, weights):
+                self._mixture = dict(weights)
+
+            def next_batch(self):
+                with self._lock:
+                    return dict(self._mixture)
+    """)
+    vs = [v for v in check_source(src) if not v.suppressed]
+    assert [v.rule for v in vs] == ["FC-LOCK"]
+    assert "set_mixture" in vs[0].message
+
+
+# ---------------------------------------------------------------------------
+# the actual tree stays clean (same contract as the CI flopcheck job)
+# ---------------------------------------------------------------------------
+
+
+def test_tree_has_no_unsuppressed_violations():
+    vs = check_paths([ROOT / "src", ROOT / "tests"],
+                     exclude=("flopcheck_corpus",))
+    active = [v.format() for v in vs if not v.suppressed]
+    assert not active, "\n".join(active)
+
+
+def test_corpus_is_excluded_from_tree_scans():
+    files = list(iter_py_files([ROOT / "tests"],
+                               exclude=("flopcheck_corpus",)))
+    assert files and not [f for f in files if "flopcheck_corpus" in str(f)]

@@ -15,6 +15,7 @@ import numpy as np
 import pytest
 
 from repro import api
+from repro.analysis.contracts import compile_guard
 from repro.configs.base import get_smoke_config
 from repro.launch.mesh import make_local_mesh
 from repro.models import model as M
@@ -42,11 +43,11 @@ def _dense_greedy(runner, params, prompts: np.ndarray, n_new: int,
     for pos in range(P):
         tok, caches = decode(params, caches, jnp.asarray(prompts[:, pos]),
                              jnp.int32(pos))
-    out = [np.asarray(tok)]
+    out = [tok]
     for pos in range(P, P + n_new - 1):
         tok, caches = decode(params, caches, tok, jnp.int32(pos))
-        out.append(np.asarray(tok))
-    return np.stack(out, 1)                       # (B, n_new)
+        out.append(tok)    # device until the loop ends (FC-HOSTSYNC)
+    return np.stack(jax.device_get(out), 1)       # (B, n_new)
 
 
 def test_online_matches_fixed_batch_decode(runner_params):
@@ -65,10 +66,11 @@ def test_online_matches_fixed_batch_decode(runner_params):
                                     page_size=16, prefill_chunk=4))
     eng.submit_many([OnlineRequest(rid=i, prompt=prompts[i], max_new=NEW)
                      for i in range(B)])
-    eng.run(max_ticks=500)
+    with compile_guard({"prefill": 1, "decode": 1}, eng.compiles,
+                       exact=True):
+        eng.run(max_ticks=500)
     out = np.stack([np.asarray(eng.reqs[i].out) for i in range(B)])
     np.testing.assert_array_equal(out, ref)
-    assert eng.prefill_traces == 1 and eng.decode_traces == 1
 
 
 def test_online_compile_count_under_churn(runner_params):
@@ -90,12 +92,14 @@ def test_online_compile_count_under_churn(runner_params):
                     max_new=8 + (i % 9))
                 for i in range(13)]                  # > 3 * max_slots
         eng.submit_many(reqs)
-        eng.run(max_ticks=3000)
+        # the 1-prefill/1-decode contract under churn, via the shared
+        # contracts layer (raises CompileGuardError on any retrace)
+        with compile_guard({"prefill": 1, "decode": 1}, eng.compiles,
+                           exact=True):
+            eng.run(max_ticks=3000)
         return eng, reqs
 
     eng, reqs = drive()
-    assert eng.prefill_traces == 1, eng.prefill_traces
-    assert eng.decode_traces == 1, eng.decode_traces
     assert eng.n_preemptions > 0, "pool was sized to force preemption"
     for r in reqs:
         assert r.done and len(r.out) == r.max_new, (r.rid, r.state)
@@ -341,6 +345,7 @@ _TP2_SCRIPT = textwrap.dedent("""
     import jax, jax.numpy as jnp
     import numpy as np
     from repro import api
+    from repro.analysis.contracts import compile_guard
     from repro.configs.base import get_smoke_config
     from repro.launch.mesh import make_local_mesh
     from repro.models import model as M
@@ -378,10 +383,11 @@ _TP2_SCRIPT = textwrap.dedent("""
     eng.submit_many([OnlineRequest(rid=i, prompt=prompts[i], max_new=NEW,
                                    temperature=0.0, seed=i)
                      for i in range(B)])
-    eng.run(max_ticks=500)
+    with compile_guard({"prefill": 1, "decode": 1}, eng.compiles,
+                       exact=True):
+        eng.run(max_ticks=500)
     out = np.stack([np.asarray(eng.reqs[i].out) for i in range(B)])
     np.testing.assert_array_equal(out, ref)
-    assert eng.prefill_traces == 1 and eng.decode_traces == 1
 
     # speculative decoding on tp=2: the B*(k+1)-token verify batch rides
     # the same EP dispatch; greedy spec output stays token-exact
@@ -393,10 +399,11 @@ _TP2_SCRIPT = textwrap.dedent("""
                         drafter=SelfDrafter(draft_layers=1))
     seng.submit_many([OnlineRequest(rid=i, prompt=prompts[i], max_new=NEW)
                       for i in range(B)])
-    seng.run(max_ticks=500)
+    with compile_guard({"draft": 1, "verify": 1}, seng.compiles,
+                       exact=True):
+        seng.run(max_ticks=500)
     sout = np.stack([np.asarray(seng.reqs[i].out) for i in range(B)])
     np.testing.assert_array_equal(sout, ref)
-    assert seng.draft_traces == 1 and seng.verify_traces == 1
 
     # radix prefix cache on the tp=2 EP path: a stream sharing a full
     # page of prompt is bitwise identical with the cache on vs off, and

@@ -36,11 +36,12 @@ def test_prefill_then_decode_matches_stepwise(arch):
     nxt = None
     for pos in range(S_PROMPT):
         nxt, caches = decode(params, caches, prompt[:, pos], jnp.int32(pos))
-    gen_a = [np.asarray(nxt)]
+    gen_a = [nxt]
     tok = nxt
     for pos in range(S_PROMPT, S_PROMPT + 4):
         tok, caches = decode(params, caches, tok, jnp.int32(pos))
-        gen_a.append(np.asarray(tok))
+        gen_a.append(tok)   # device until the loop ends (FC-HOSTSYNC)
+    gen_a = [np.asarray(g) for g in jax.device_get(gen_a)]
 
     # path B: prefill emits the caches wholesale, then decode continues.
     # (smoke configs run at tp=1 so the prefill cache S-slice is the full
@@ -69,6 +70,9 @@ def test_prefill_then_decode_matches_stepwise(arch):
     assert np.array_equal(np.asarray(first), gen_a[0]), \
         (np.asarray(first), gen_a[0])
     tok = first
-    for i, pos in enumerate(range(S_PROMPT, S_PROMPT + 4)):
+    gen_b = []
+    for pos in range(S_PROMPT, S_PROMPT + 4):
         tok, pcaches = decode(params, pcaches, tok, jnp.int32(pos))
-        np.testing.assert_array_equal(np.asarray(tok), gen_a[i + 1])
+        gen_b.append(tok)   # device until the loop ends (FC-HOSTSYNC)
+    for i, tok_b in enumerate(jax.device_get(gen_b)):
+        np.testing.assert_array_equal(tok_b, gen_a[i + 1])

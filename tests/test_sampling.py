@@ -169,11 +169,11 @@ def test_offline_online_parity_at_nonzero_temp(runner_params):
     for pos in range(P):
         tok, caches = decode(params, caches, jnp.asarray(prompts[:, pos]),
                              jnp.int32(pos), *knobs)
-    ref = [np.asarray(tok)]
+    ref = [tok]
     for pos in range(P, P + NEW - 1):
         tok, caches = decode(params, caches, tok, jnp.int32(pos), *knobs)
-        ref.append(np.asarray(tok))
-    ref = np.stack(ref, 1)
+        ref.append(tok)    # device until the loop ends (FC-HOSTSYNC)
+    ref = np.stack(jax.device_get(ref), 1)
 
     eng = OnlineEngine(runner, params, OnlineConfig(
         max_slots=B, max_context=S, page_size=16, prefill_chunk=4))

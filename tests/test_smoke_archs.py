@@ -86,5 +86,6 @@ def test_loss_decreases(arch, mesh):
         params, opt, m = step(params, opt, batch, jnp.int32(i),
                               jax.random.PRNGKey(i), jnp.float32(1e-3))
         if first is None:
-            first = float(m["loss/ce"])
-    assert float(m["loss/ce"]) < first * 0.8, (first, float(m["loss/ce"]))
+            first = m["loss/ce"]   # stays on device until the loop ends
+    first, last = jax.device_get((first, m["loss/ce"]))
+    assert last < first * 0.8, (first, last)
