@@ -15,7 +15,12 @@ cache must find it with no caller-supplied key and report a hit rate
 above 0.5), and a **scheduler-policy sweep** (the same saturating
 hot-prefix load under fcfs / decode-priority / prefill-priority tick
 ordering on one engine — policy switches are host bookkeeping, so the
-compile counters must stay at one trace per step shape).
+compile counters must stay at one trace per step shape), and an
+**SLO-shedding** comparison past the knee (unbounded fcfs vs a static
+queue gate vs the `SLOTracker` gate at the same 4x-overload rate: only
+the SLO gate keeps admitted-request TTFT p99 inside a machine-relative
+deadline — half the better baseline p99 measured on this host — paying
+with explicit sheds).
 
 Writes the committed trajectory artifact ``BENCH_serve_online.json`` at
 the repo root.  Interpret-mode CPU wall clock: the latency *shape*
@@ -186,6 +191,60 @@ def run(fast: bool = False):
                      f"hit_rate={rep['prefix_hit_rate']:.2f}"))
         policy_cases.append(rep)
 
+    # -- SLO-aware shedding past the knee -------------------------------------
+    # 4x-overload rate, three admission responses: unbounded fcfs
+    # queueing (every request admitted, TTFT absorbs the overload and
+    # breaches any deadline), a static queue gate (sheds on a fixed
+    # depth picked without latency knowledge — still breaches), and the
+    # SLOTracker gate (sheds on its windowed TTFT estimate — the p99 of
+    # ADMITTED requests stays inside the deadline).  The deadline is
+    # machine-relative: half the better of the two baseline p99s as
+    # measured on this host (unbounded queueing grows with the load,
+    # the static gate saturates at its depth — taking min of both keeps
+    # every breach assertion a 2x margin at any tick speed).
+    from repro.telemetry import SLOConfig
+
+    knee_rate = 4.0 * geometry["max_slots"] * svc_rate
+    n_slo = 2 * n_req            # sustained overload, not a short burst
+
+    def slo_case(ocfg):
+        eng = OnlineEngine(runner, params, ocfg)
+        # eats the compiles AND warms the tick window past
+        # min_observations so the gate is armed when the load starts
+        run_poisson_load(eng, rate=100.0, n_requests=2, prompt_len=8,
+                         max_new=2, vocab_size=cfg.vocab_size, seed=7)
+        rep = run_poisson_load(eng, rate=knee_rate, n_requests=n_slo,
+                               prompt_len=8, max_new=max_new,
+                               vocab_size=cfg.vocab_size)
+        assert rep["prefill_compiles"] == 1, rep["prefill_compiles"]
+        assert rep["decode_compiles"] == 1, rep["decode_compiles"]
+        return rep
+
+    slo_cases = {"fcfs_unbounded": slo_case(OnlineConfig(**geometry))}
+    slo_cases["static_gate"] = slo_case(
+        OnlineConfig(**geometry, max_queue=3 * geometry["max_slots"],
+                     overload="shed"))
+    deadline_ms = 0.5 * min(slo_cases["fcfs_unbounded"]["ttft_p99_ms"],
+                            slo_cases["static_gate"]["ttft_p99_ms"])
+    slo_cases["slo_gate"] = slo_case(
+        OnlineConfig(**geometry, overload="slo",
+                     slo=SLOConfig(ttft_p99_ms=deadline_ms, window=64,
+                                   min_observations=4, headroom=5.0)))
+    for mode, rep in slo_cases.items():
+        rep["ttft_deadline_ms"] = deadline_ms
+        rows.append((f"serve_online_{mode}_ttft_p99_ms",
+                     f"{rep['ttft_p99_ms']:.1f}",
+                     f"deadline={deadline_ms:.1f}_shed={rep['shed']}"))
+    assert slo_cases["fcfs_unbounded"]["shed"] == 0
+    assert slo_cases["fcfs_unbounded"]["ttft_p99_ms"] > deadline_ms, \
+        (slo_cases["fcfs_unbounded"]["ttft_p99_ms"], deadline_ms)
+    # a depth-only gate sheds a little but admits deep queues anyway
+    assert slo_cases["static_gate"]["ttft_p99_ms"] > deadline_ms, \
+        (slo_cases["static_gate"]["ttft_p99_ms"], deadline_ms)
+    assert slo_cases["slo_gate"]["shed"] > 0, "gate never fired"
+    assert slo_cases["slo_gate"]["ttft_p99_ms"] <= deadline_ms, \
+        (slo_cases["slo_gate"]["ttft_p99_ms"], deadline_ms)
+
     detail = {
         "bench": "online continuous-batching serving engine "
                  "(paged KV + Poisson load)",
@@ -196,6 +255,7 @@ def run(fast: bool = False):
         "speculative": spec_cases,
         "hot_prefix": hot,
         "policies": policy_cases,
+        "slo_shedding": slo_cases,
         "claim": "continuous batching holds inter-token latency roughly "
                  "flat while TTFT absorbs overload (queueing), with one "
                  "compile per step shape across all churn; speculative "
@@ -204,7 +264,10 @@ def run(fast: bool = False):
                  "greedy; a shared system prompt turns into radix "
                  "prefix-cache hits (no caller-supplied key) that skip "
                  "prefill work at >0.5 hit rate; scheduler policies "
-                 "reorder the same jitted steps with zero recompiles",
+                 "reorder the same jitted steps with zero recompiles; "
+                 "past the knee the SLO gate sheds on its windowed TTFT "
+                 "estimate and keeps admitted-request TTFT p99 inside "
+                 "the deadline that unbounded fcfs queueing breaches",
     }
     with open(os.path.join(ROOT, "BENCH_serve_online.json"), "w") as f:
         json.dump({**detail, "date": time.strftime("%Y-%m-%d"),

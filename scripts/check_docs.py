@@ -18,7 +18,7 @@ DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
 # pages that must exist (a deleted/renamed doc is an error even though
 # DOC_FILES globs whatever is present)
 REQUIRED_PAGES = ("architecture.md", "kernels.md", "training.md",
-                  "serving.md", "analysis.md")
+                  "serving.md", "analysis.md", "observability.md")
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 
 

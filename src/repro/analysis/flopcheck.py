@@ -31,6 +31,14 @@ carries the catalog with the historical bug each rule would have caught):
                  hand in PR 4).  Private (``_``-prefixed) methods are
                  assumed to be called under the lock and are not flagged.
   FC-DEPRECATED  removed/renamed jax APIs (``jax.tree_map`` et al.).
+  FC-TELEMETRY   host clock reads (``time.time``/``perf_counter``/
+                 ``monotonic``) or telemetry-registry writes
+                 (``.observe``/``.inc``/``.sample`` on metric objects)
+                 inside a jit-traced body — both run ONCE at trace time,
+                 so the compiled step bakes in a stale constant and the
+                 metric never updates again.  Time and record around the
+                 jitted call on the host (the OnlineEngine/Trainer
+                 idiom), never inside it.
 
 Suppression: append ``# flopcheck: disable=FC-RULE`` (comma-separate for
 several rules) to the flagged line, or put it on its own line directly
@@ -60,7 +68,20 @@ RULES: Dict[str, str] = {
     "FC-DONATE": "donated buffer reused after the donating call",
     "FC-LOCK": "lock-guarded attribute written without the lock",
     "FC-DEPRECATED": "removed/renamed jax API",
+    "FC-TELEMETRY": "host timing/metrics call inside a jit-traced body",
 }
+
+# host clock callees flagged inside traced bodies (module attr or bare
+# name imported via `from time import ...`)
+HOST_CLOCK_CALLS = {
+    "time", "perf_counter", "perf_counter_ns", "monotonic",
+    "monotonic_ns", "process_time", "time_ns",
+}
+# metric-object write methods (MetricsRegistry children + XPUTimer ring)
+METRIC_WRITE_ATTRS = {"observe", "inc", "sample"}
+# receivers whose `.sample`/`.inc` are NOT metrics (random.sample,
+# np.random.sample, jnp-keyed samplers)
+METRIC_SAFE_ROOTS = {"np", "numpy", "random", "jax", "jnp", "secrets"}
 
 # jax APIs removed around 0.4.x -> replacement hint
 DEPRECATED_APIS: Dict[str, str] = {
@@ -508,6 +529,7 @@ class _FileChecker:
         self._check_deprecated()
         self._check_pallas()
         self._check_locks()
+        self._check_telemetry()
         for node in ast.walk(self.tree):
             if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
                 cls = self._enclosing_class(node)
@@ -614,6 +636,88 @@ class _FileChecker:
                     f"side-effecting host call `{d}` inside a Pallas "
                     f"kernel body — it runs once at trace time, never "
                     f"per grid step (use pl.debug_print)")
+
+    # -- FC-TELEMETRY -------------------------------------------------------
+    def _is_jit_decorator(self, dec: ast.AST) -> bool:
+        d = dotted(dec)
+        if d and _last(d) in ("jit", "pjit"):
+            return True
+        if isinstance(dec, ast.Call):
+            d = dotted(dec.func)
+            if d and _last(d) in ("jit", "pjit"):
+                return True        # @jax.jit(donate_argnums=...) form
+            if d and _last(d) == "partial" and dec.args:
+                inner = dotted(dec.args[0])
+                if inner and _last(inner) in ("jit", "pjit"):
+                    return True
+        return False
+
+    def _jitted_fn_names(self) -> Set[str]:
+        """Function names whose bodies run under jax tracing: decorated
+        with jit, passed to a jit()/pjit()/shard_map() call, or inner
+        defs returned by a ``make_*``/``jit_*`` step factory (the repo
+        convention — the caller always jits the returned callable)."""
+        jitted: Set[str] = set()
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if any(self._is_jit_decorator(dec)
+                       for dec in node.decorator_list):
+                    jitted.add(node.name)
+            elif isinstance(node, ast.Call):
+                d = dotted(node.func)
+                if d and _last(d) in ("jit", "pjit", "shard_map") \
+                        and node.args:
+                    ad = dotted(node.args[0])
+                    if ad:
+                        jitted.add(_last(ad))
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.FunctionDef) \
+                    and HANDLE_MAKER_RE.match(node.name):
+                inner = {s.name for s in ast.walk(node)
+                         if isinstance(s, ast.FunctionDef) and s is not node}
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Return) and sub.value is not None:
+                        rd = dotted(sub.value)
+                        if rd and rd in inner:
+                            jitted.add(rd)
+        return jitted
+
+    def _check_telemetry(self):
+        jitted = self._jitted_fn_names()
+        if not jitted:
+            return
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name in jitted:
+                self._check_traced_body(node)
+
+    def _check_traced_body(self, fn: ast.AST):
+        for sub in ast.walk(fn):
+            if not isinstance(sub, ast.Call):
+                continue
+            d = dotted(sub.func)
+            if d is not None and _last(d) in HOST_CLOCK_CALLS and (
+                    _root(d) in ("time", "datetime")
+                    or "." not in d):
+                self.add(
+                    "FC-TELEMETRY", sub,
+                    f"host clock `{d}()` inside jit-traced `{fn.name}` — "
+                    f"it runs once at trace time and bakes a constant "
+                    f"timestamp into the compiled graph; time on the "
+                    f"host around the jitted call (XPUTimer.span)")
+                continue
+            if isinstance(sub.func, ast.Attribute) \
+                    and sub.func.attr in METRIC_WRITE_ATTRS:
+                rd = dotted(sub.func.value)
+                if rd and _root(rd) in METRIC_SAFE_ROOTS:
+                    continue
+                self.add(
+                    "FC-TELEMETRY", sub,
+                    f"metrics write `.{sub.func.attr}()` inside "
+                    f"jit-traced `{fn.name}` — the registry accepts "
+                    f"host scalars only and the write executes once at "
+                    f"trace time, never per step; record after draining "
+                    f"outputs on the host")
 
     # -- FC-LOCK ------------------------------------------------------------
     def _check_locks(self):

@@ -20,7 +20,9 @@ BENCH_serve_online.json (`--report` to relocate).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
+import time
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +39,7 @@ from repro.serving.flood import (FloodEngine, GenRequest,
 from repro.serving.online import (OnlineConfig, OnlineEngine,
                                   run_poisson_load)
 from repro.serving.segment_cache import SegmentCache
+from repro.telemetry import MetricsServer, SLOConfig, write_chrome_trace
 
 
 def build_model_engine(cfg, mesh, n_stages: int, seq_len: int,
@@ -128,6 +131,13 @@ def run_online(cfg, mesh, flags, args) -> None:
                         max_seq=args.seq, flags=flags)
     params = runner.init_params(0)
     budgets = parse_tenant_budgets(args.tenant_budgets)
+    slo = None
+    if args.overload == "slo":
+        if args.slo_ttft_ms is None:
+            raise SystemExit("--overload slo requires --slo-ttft-ms "
+                             "(and optionally --slo-itl-ms)")
+        slo = SLOConfig(ttft_p99_ms=args.slo_ttft_ms,
+                        itl_p99_ms=args.slo_itl_ms)
     ocfg = OnlineConfig(
         max_slots=quantize_microbatch(args.slots, args.tp),
         max_context=args.seq, page_size=args.page_size,
@@ -137,8 +147,15 @@ def run_online(cfg, mesh, flags, args) -> None:
         seed=args.seed, spec_k=args.spec_k,
         radix_cache=not args.no_radix_cache, policy=args.policy,
         max_queue=args.max_queue, overload=args.overload,
-        tenant_budgets=budgets)
+        tenant_budgets=budgets, slo=slo)
     eng = OnlineEngine(runner, params, ocfg, drafter=make_drafter(cfg, args))
+    server = None
+    if args.metrics_port is not None:
+        # point-in-time Prometheus scrape on a background daemon thread
+        # (docs/observability.md); port 0 binds an ephemeral port
+        server = MetricsServer(eng.registry, port=args.metrics_port)
+        print(f"[online] metrics -> "
+              f"http://127.0.0.1:{server.start()}/metrics")
     # one engine serves every rate (the pool drains between loads); a
     # small warm-up load eats the XLA compiles so the reported
     # percentiles measure scheduling, not compilation
@@ -180,6 +197,7 @@ def run_online(cfg, mesh, flags, args) -> None:
                    "radix_cache": ocfg.radix_cache, "policy": ocfg.policy,
                    "max_queue": ocfg.max_queue, "overload": ocfg.overload,
                    "tenant_budgets": budgets,
+                   "slo": dataclasses.asdict(slo) if slo else None,
                    "tp": args.tp, "moe_dispatch": args.moe_dispatch,
                    "paged_attn": args.paged_attn},
         "note": ("interpret-mode CPU wall clock - scheduling/latency "
@@ -189,6 +207,18 @@ def run_online(cfg, mesh, flags, args) -> None:
     with open(args.report, "w") as f:
         json.dump(out, f, indent=1)
     print(f"[online] report -> {args.report}")
+    if args.trace_out:
+        n = write_chrome_trace(args.trace_out, timer=eng.timer,
+                               request_log=eng.rlog, registry=eng.registry)
+        print(f"[online] trace ({n} events) -> {args.trace_out} "
+              f"(open at https://ui.perfetto.dev)")
+    if server is not None:
+        if args.metrics_hold > 0:
+            # keep /metrics scrapable after the load drains (CI curls a
+            # post-run snapshot; a real deployment would serve forever)
+            print(f"[online] holding /metrics for {args.metrics_hold:g}s")
+            time.sleep(args.metrics_hold)
+        server.stop()
 
 
 def main():
@@ -250,10 +280,29 @@ def main():
                     help="online: bound the arrival queue (saturation "
                          "gate; default unbounded)")
     ap.add_argument("--overload", default="defer",
-                    choices=["defer", "shed"],
+                    choices=["defer", "shed", "slo"],
                     help="online: full-queue response — 'defer' makes the "
                          "loadgen retry later, 'shed' drops the request "
-                         "(counted in the report)")
+                         "(counted in the report); 'slo' sheds whenever "
+                         "the windowed latency view says admitting would "
+                         "breach --slo-ttft-ms/--slo-itl-ms")
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="online: windowed p99 TTFT deadline for "
+                         "--overload slo (milliseconds)")
+    ap.add_argument("--slo-itl-ms", type=float, default=None,
+                    help="online: optional windowed p99 inter-token "
+                         "latency deadline for --overload slo")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="online: serve a Prometheus text scrape at "
+                         "http://127.0.0.1:PORT/metrics on a background "
+                         "thread (0 = ephemeral port)")
+    ap.add_argument("--metrics-hold", type=float, default=0.0,
+                    help="online: keep /metrics up for SECONDS after the "
+                         "loads finish (lets CI scrape a completed run)")
+    ap.add_argument("--trace-out", default=None,
+                    help="online: write a Chrome trace-event JSON of the "
+                         "run (per-slot + scheduler-phase tracks, counter "
+                         "tracks) viewable at https://ui.perfetto.dev")
     ap.add_argument("--no-radix-cache", action="store_true",
                     help="online: disable the content-addressed radix "
                          "prefix cache (on by default; token streams are "

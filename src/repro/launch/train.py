@@ -33,7 +33,6 @@ from repro.launch.mesh import make_local_mesh
 from repro.models import model as M
 from repro.optim import adamw
 from repro.optim.schedule import AccumWarmup, WSDSchedule
-from repro.telemetry.xputimer import XPUTimer
 from repro.training.trainer import TrainConfig, Trainer
 
 
@@ -77,6 +76,11 @@ def main():
     ap.add_argument("--edit-workers", type=int, default=0,
                     help=">0 runs EDiT local-SGD with K workers")
     ap.add_argument("--report", default=None, help="write history JSON here")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace-event JSON of the run "
+                         "(XPUTimer span tracks: data/step/drain/"
+                         "checkpoint) viewable at https://ui.perfetto.dev; "
+                         "trainer path only")
     args = ap.parse_args()
 
     bs_warmup = None
@@ -139,13 +143,19 @@ def main():
             donate=not args.no_donate,
             checkpoint_dir=args.checkpoint_dir,
             checkpoint_every=args.checkpoint_every)
-        trainer = Trainer(runner, pipe, tcfg, timer=XPUTimer())
+        trainer = Trainer(runner, pipe, tcfg)
         if args.resume:
             name = trainer.restore("latest")
             print(f"[train] resumed from {name} at step {trainer.step}")
         history = trainer.train()
         trainer.close()
         print(json.dumps(trainer.timer.diagnose()["spans"], indent=1))
+        if args.trace_out:
+            from repro.telemetry import write_chrome_trace
+            n = write_chrome_trace(args.trace_out, timer=trainer.timer,
+                                   registry=trainer.registry)
+            print(f"[train] trace ({n} events) -> {args.trace_out} "
+                  f"(open at https://ui.perfetto.dev)")
 
     if args.report:
         with open(args.report, "w") as f:

@@ -78,6 +78,20 @@ Two newer layers ride the same fixed-shape contract:
 `run_poisson_load` is the load generator: Poisson arrivals at a given
 rate, per-request TTFT / inter-token latency / throughput percentiles —
 `launch/serve.py --online` reports them into BENCH_serve_online.json.
+
+**Telemetry** (docs/observability.md): every engine owns a
+`telemetry.MetricsRegistry` (TTFT/ITL/tick histograms, churn counters,
+occupancy gauges + per-tick counter-track series), a
+`telemetry.RequestLog` recording the full request lifecycle
+(enqueue -> admit -> prefill chunks -> first token -> decode ->
+preempt/requeue -> complete/shed, with tick indices and timestamps),
+and an `XPUTimer` spanning the scheduler phases of every tick — all of
+it host-side bookkeeping under the zero-host-sync contract, exportable
+to Perfetto via `telemetry.write_chrome_trace`.  `overload="slo"`
+closes the loop: a `telemetry.SLOTracker` over the windowed histograms
+vetoes admission when the configured TTFT/ITL p99 deadlines would be
+breached (shedding at submit time keeps the *admitted* p99 inside the
+deadline past the knee).
 """
 from __future__ import annotations
 
@@ -96,10 +110,14 @@ from repro.models import layers as L
 from repro.models import model as M
 from repro.serving.flood import quantize_microbatch
 from repro.serving.segment_cache import PageAllocator
+from repro.telemetry.metrics import MetricsRegistry
+from repro.telemetry.request_log import RequestLog
+from repro.telemetry.slo import SLOConfig, SLOTracker
+from repro.telemetry.xputimer import XPUTimer
 
 
 POLICIES = ("fcfs", "decode-priority", "prefill-priority")
-OVERLOAD = ("defer", "shed")
+OVERLOAD = ("defer", "shed", "slo")
 
 
 @dataclasses.dataclass
@@ -146,8 +164,14 @@ class OnlineConfig:
     # scheduler policy layer
     policy: str = "fcfs"
     max_queue: Optional[int] = None     # bounded arrival queue (None = inf)
-    overload: str = "defer"             # queue-full response: defer | shed
+    overload: str = "defer"             # gate response: defer | shed | slo
     tenant_budgets: Optional[Dict[str, int]] = None
+    # SLO-aware admission (overload="slo"): shed at submit time when the
+    # windowed latency view says admitting would breach a deadline
+    # (telemetry.slo.SLOTracker — backward p99 + forward TTFT estimate)
+    slo: Optional[SLOConfig] = None
+    # per-request lifecycle log ring entries (telemetry.request_log)
+    trace_ring: int = 65536
     # debug contracts (analysis.contracts): run every tick under a
     # device->host transfer_guard.  Default comes from REPRO_DEBUG_GUARDS
     # so CI legs can arm it without touching call sites.  None = env.
@@ -204,7 +228,10 @@ class OnlineEngine:
     admission / completion / preemption churn.
     """
 
-    def __init__(self, runner, params, cfg: OnlineConfig, drafter=None):
+    def __init__(self, runner, params, cfg: OnlineConfig, drafter=None,
+                 registry: Optional[MetricsRegistry] = None,
+                 request_log: Optional[RequestLog] = None,
+                 timer: Optional[XPUTimer] = None):
         M.check_paged_support(runner.cfg)
         env = runner.env
         tp = env.tp
@@ -237,6 +264,10 @@ class OnlineEngine:
             raise ValueError(f"overload={cfg.overload!r} not in {OVERLOAD}")
         if cfg.max_queue is not None and cfg.max_queue < 1:
             raise ValueError(f"max_queue={cfg.max_queue} must be >= 1")
+        if cfg.overload == "slo" and cfg.slo is None:
+            raise ValueError(
+                'overload="slo" needs deadlines: set OnlineConfig.slo to a '
+                "telemetry.SLOConfig(ttft_p99_ms=...)")
         self.cfg = cfg
         self.runner = runner
         self.params = params
@@ -351,6 +382,60 @@ class OnlineEngine:
         self.n_shed = 0                  # saturation-gate rejections
         self.n_budget_skips = 0          # admissions deferred over budget
 
+        # -- telemetry (docs/observability.md) ----------------------------
+        # Everything below reads host scalars the scheduler already holds
+        # (zero-host-sync contract): no metric call touches a jax value,
+        # and the contract tests run ticks under compile_guard +
+        # transfer_guard with all of this enabled.
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.rlog = (request_log if request_log is not None
+                     else RequestLog(cfg.trace_ring))
+        self.timer = (timer if timer is not None
+                      else XPUTimer(registry=self.registry))
+        if self.timer.registry is None:
+            self.timer.registry = self.registry
+        # SLOTracker first: it sizes the shared latency-histogram windows
+        # (get-or-create below then returns the same children)
+        self.slo = (SLOTracker(cfg.slo, self.registry)
+                    if cfg.slo is not None else None)
+        reg = self.registry
+        self._m_ttft = reg.histogram(
+            "serve_ttft_ms", "time to first token (admitted requests)")
+        self._m_itl = reg.histogram(
+            "serve_itl_ms", "inter-token latency (decode steps)")
+        self._m_tick = reg.histogram(
+            "serve_tick_ms", "engine tick wall time")
+        self._m_enq = reg.counter(
+            "serve_enqueued_total", "requests accepted into the queue")
+        self._m_admit = reg.counter(
+            "serve_admitted_total", "requests bound to a slot")
+        self._m_done = reg.counter(
+            "serve_completed_total", "requests finished")
+        self._m_shed = reg.counter(
+            "serve_shed_total", "requests rejected by the admission gate")
+        self._m_preempt = reg.counter(
+            "serve_preemptions_total", "slot preempt-and-requeue events")
+        self._m_tokens = reg.counter(
+            "serve_tokens_total", "tokens emitted across all requests")
+        self._m_evict = reg.counter(
+            "serve_cache_evictions_total", "radix-cache pages evicted")
+        self._g_queue = reg.gauge("serve_queue_depth", "arrival queue depth")
+        self._g_pages = reg.gauge(
+            "serve_pages_in_use", "KV pool pages held (requests+cache)")
+        self._g_slots = reg.gauge("serve_slots_active", "occupied slots")
+        # per-tick samples -> Perfetto counter tracks (trace_export)
+        self._s_pages = reg.series("page_pool_occupancy")
+        self._s_queue = reg.series("queue_depth")
+        self._s_radix = reg.series("radix_hit_rate")
+        self._s_accept = reg.series("spec_acceptance") if self.spec else None
+        self._admitted_tokens = 0        # prefill tokens ever admitted
+        self.alloc.on_evict = self._on_evict
+
+    def _on_evict(self, page: int):
+        """PageAllocator hook: one radix-cache page evicted."""
+        self._m_evict.inc()
+        self.rlog.record("evict", -1, tick=self.ticks, arg=page)
+
     def set_policy(self, policy: str):
         """Switch the tick-ordering policy at runtime.  Pure host state —
         the jitted steps are untouched, so this never recompiles (the
@@ -365,7 +450,10 @@ class OnlineEngine:
         queue triggers the saturation gate: "shed" marks the request
         shed and drops it (state="shed", counted in `n_shed`), "defer"
         returns False without touching it so the caller can retry after
-        the engine drains.  Returns True when enqueued."""
+        the engine drains.  With ``overload="slo"`` the SLOTracker also
+        vetoes admission whenever its windowed latency view says this
+        request could not meet the TTFT/ITL deadlines (a full queue
+        sheds too).  Returns True when enqueued."""
         total = len(req.prompt) + req.max_new
         if total > self.cfg.max_context:
             raise ValueError(f"request {req.rid}: prompt+max_new={total} "
@@ -379,15 +467,34 @@ class OnlineEngine:
             raise ValueError(f"rid {req.rid} is still in flight "
                              f"(state={old.state}); rids must be unique "
                              f"among live requests")
+        if req.arrival_t <= 0.0:
+            req.arrival_t = time.perf_counter()
+        if self.cfg.overload == "slo":
+            queued_tokens = (sum(len(self.reqs[q].prompt)
+                                 for q in self.queue) + len(req.prompt))
+            reason = self.slo.should_shed(queued_tokens,
+                                          self.cfg.prefill_chunk)
+            if reason is not None:
+                return self._shed(req)
         if (self.cfg.max_queue is not None
                 and len(self.queue) >= self.cfg.max_queue):
-            if self.cfg.overload == "shed":
-                req.state = "shed"
-                self.n_shed += 1
+            if self.cfg.overload in ("shed", "slo"):
+                return self._shed(req)
             return False
         self.reqs[req.rid] = req
         self.queue.append(req.rid)
+        self._m_enq.inc()
+        self.rlog.record("enqueue", req.rid, tick=self.ticks)
         return True
+
+    def _shed(self, req: OnlineRequest) -> bool:
+        req.state = "shed"
+        self.n_shed += 1
+        self._m_shed.inc()
+        if self.slo is not None:
+            self.slo.on_shed()
+        self.rlog.record("shed", req.rid, tick=self.ticks)
+        return False
 
     def submit_many(self, reqs: Sequence[OnlineRequest]):
         for r in reqs:
@@ -490,6 +597,10 @@ class OnlineEngine:
             self.topks[slot] = (r.top_k if r.top_k is not None
                                 else cfg.top_k)
             self.admission_log.append(rid)
+            self._m_admit.inc()
+            self._admitted_tokens += len(r.fed)
+            self.rlog.record("admit", rid, slot=slot, tick=self.ticks,
+                             arg=len(r.fed))
         # over-budget holds return to the queue head in FCFS order
         for cand in reversed(skipped):
             self.queue.appendleft(cand)
@@ -531,6 +642,9 @@ class OnlineEngine:
         r.state = "done"
         r.finish_t = now
         r.fed = None
+        self._m_done.inc()
+        self.rlog.record("complete", rid, slot=slot, tick=self.ticks,
+                         arg=len(r.out))
         self._clear_slot(slot)
 
     def _preempt_slot(self, slot: int):
@@ -551,6 +665,9 @@ class OnlineEngine:
         self.queue.appendleft(rid)
         self._clear_slot(slot)
         self.n_preemptions += 1
+        self._m_preempt.inc()
+        self.rlog.record("preempt", rid, slot=slot, tick=self.ticks)
+        self.rlog.record("requeue", rid, tick=self.ticks)
 
     def _make_room(self, rid: int, n_tokens: int,
                    allow_preempt: bool = True) -> bool:
@@ -625,6 +742,8 @@ class OnlineEngine:
             nxt, self.pools = self._prefill(self.params, self.pools,
                                             *step_args)
         r.prefill_pos += n_valid
+        self.rlog.record("prefill_chunk", rid, slot=slot, tick=self.ticks,
+                         arg=n_valid)
         if r.prefill_pos < len(r.fed):
             return True                 # more chunks to go
         # prompt (+ replayed tokens) fully written: enter decode state
@@ -632,6 +751,8 @@ class OnlineEngine:
         self.lens[slot] = len(r.fed)
         self.active[slot] = True
         r.state = "decode"
+        self.rlog.record("prefill_done", rid, slot=slot, tick=self.ticks,
+                         arg=len(r.fed))
         if self.cfg.radix_cache:
             # publish-on-prefill: the prompt's full pages enter the trie
             # the moment they are written, so concurrent arrivals with
@@ -651,6 +772,10 @@ class OnlineEngine:
             r.out.append(tok)
             r.first_token_t = t
             r.token_times.append(t)
+            self._m_tokens.inc()
+            self.rlog.record("first_token", rid, slot=slot, tick=self.ticks)
+            if r.arrival_t > 0.0:
+                self._m_ttft.observe((t - r.arrival_t) * 1e3)
             if len(r.out) >= r.max_new or tok == self.cfg.eos_id:
                 self._finish(slot, t)
                 return True
@@ -685,11 +810,16 @@ class OnlineEngine:
             rid = int(self.slot_rid[slot])
             r = self.reqs[rid]
             tok = int(nxt[slot])
+            if r.token_times:
+                self._m_itl.observe((t - r.token_times[-1]) * 1e3)
             r.out.append(tok)
             r.token_times.append(t)
             r.n_decode_ticks += 1
             self.lens[slot] += 1
             self.tok[slot] = tok
+            self._m_tokens.inc()
+            self.rlog.record("decode", rid, slot=slot, tick=self.ticks,
+                             arg=1)
             if len(r.out) >= r.max_new or tok == self.cfg.eos_id:
                 self._finish(slot, t)
 
@@ -739,6 +869,8 @@ class OnlineEngine:
             self.spec_proposed += K
             self.spec_accepted += na
             r.n_decode_ticks += 1
+            if r.token_times:
+                self._m_itl.observe((t - r.token_times[-1]) * 1e3)
             # emit the accepted drafts + the bonus/residual token, cut
             # short by max_new / eos exactly like the plain decode path
             done = False
@@ -751,6 +883,9 @@ class OnlineEngine:
                 if len(r.out) >= r.max_new or tok == self.cfg.eos_id:
                     done = True
                     break
+            self._m_tokens.inc(kept)
+            self.rlog.record("decode", rid, slot=slot, tick=self.ticks,
+                             arg=kept)
             if done:
                 self._finish(slot, t)
                 continue
@@ -816,19 +951,50 @@ class OnlineEngine:
         never recompiles."""
         now = time.perf_counter() if now is None else now
         self.ticks += 1
-        with self._tick_guard():
-            self._admit(now)
+        t_start = time.perf_counter()
+        step_span = "spec" if self.spec else "decode"
+        with self.timer.span("tick"), self._tick_guard():
+            with self.timer.span("admit"):
+                self._admit(now)
             step = self._spec_tick if self.spec else self._decode_tick
             if self.policy == "decode-priority":
-                step(now)
-                self._prefill_tick(now)
+                with self.timer.span(step_span):
+                    step(now)
+                with self.timer.span("prefill"):
+                    self._prefill_tick(now)
             elif self.policy == "prefill-priority":
-                while self._prefill_tick(now):
-                    pass
-                step(now)
+                with self.timer.span("prefill"):
+                    while self._prefill_tick(now):
+                        pass
+                with self.timer.span(step_span):
+                    step(now)
             else:                            # fcfs
-                self._prefill_tick(now)
-                step(now)
+                with self.timer.span("prefill"):
+                    self._prefill_tick(now)
+                with self.timer.span(step_span):
+                    step(now)
+        self._m_tick.observe((time.perf_counter() - t_start) * 1e3)
+        self._sample_counters()
+
+    def _sample_counters(self):
+        """Per-tick host-scalar samples -> gauges + Perfetto counter
+        tracks.  Every value is bookkeeping the scheduler already holds
+        (allocator free-list length, queue length, cumulative stats) —
+        nothing here can touch the device."""
+        t_us = int(time.perf_counter() * 1e6)
+        in_use = self.alloc.pages_in_use
+        self._g_pages.set(in_use)
+        self._s_pages.sample(in_use, t_us)
+        depth = len(self.queue)
+        self._g_queue.set(depth)
+        self._s_queue.sample(depth, t_us)
+        self._g_slots.set(int((self.slot_rid >= 0).sum()))
+        hit_rate = (self.alloc.stats["radix_hit_tokens"]
+                    / max(self._admitted_tokens, 1))
+        self._s_radix.sample(hit_rate, t_us)
+        if self._s_accept is not None:
+            self._s_accept.sample(
+                self.spec_accepted / max(self.spec_proposed, 1), t_us)
 
     def _tick_guard(self):
         """debug_guards mode: the whole tick runs under a device->host
@@ -958,6 +1124,11 @@ def run_poisson_load(engine: OnlineEngine, *, rate: float, n_requests: int,
     decoded = sum(max(len(r.out) - 1, 0) for r in served)
     proposed = engine.spec_proposed - proposed0
     accepted = engine.spec_accepted - accepted0
+    # SLO gate view (overload="slo"): windowed percentiles + deadlines at
+    # end of run — ttft_p50/p99_ms above already cover ADMITTED requests
+    # only (shed ones never reach a first token), which is the population
+    # the deadline is defined over
+    slo_view = engine.slo.snapshot() if engine.slo is not None else None
     return {
         "rate_req_s": rate,
         "n_requests": n_requests,
@@ -992,4 +1163,6 @@ def run_poisson_load(engine: OnlineEngine, *, rate: float, n_requests: int,
         "acceptance_rate": accepted / max(proposed, 1),
         "decode_ticks_per_token": decode_ticks / max(decoded, 1),
         "allocator": dict(engine.alloc.stats),
+        "overload": engine.cfg.overload,
+        "slo": slo_view,
     }

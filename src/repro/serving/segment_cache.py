@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -332,11 +332,22 @@ class PageAllocator:
                       "preempts": 0, "alloc_failures": 0, "trims": 0,
                       "radix_hit_tokens": 0, "published": 0, "dedups": 0,
                       "evictions": 0}
+        # telemetry hook: called with the page id for every radix-cache
+        # eviction (the OnlineEngine wires this to its request log /
+        # metrics registry; see docs/observability.md).  Host-side only.
+        self.on_evict: Optional[Callable[[int], None]] = None
 
     # -- queries --------------------------------------------------------------
     @property
     def n_free(self) -> int:
         return len(self.free_list)
+
+    @property
+    def pages_in_use(self) -> int:
+        """Allocatable pages currently held (by requests, the trie, or
+        pinned prefixes) — the occupancy number the engine samples into
+        its `page_pool_occupancy` counter track every tick."""
+        return self.n_pages - self.reserved - len(self.free_list)
 
     def capacity(self, rid: int) -> int:
         """Tokens the request's current pages can hold."""
@@ -439,9 +450,12 @@ class PageAllocator:
                     best = node
             if best is None:
                 return freed
+            evicted_page = best.page
             self._drop_node(best)
             freed += 1
             self.stats["evictions"] += 1
+            if self.on_evict is not None:
+                self.on_evict(evicted_page)
         return freed
 
     def flush_radix(self) -> int:

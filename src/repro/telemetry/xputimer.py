@@ -12,8 +12,17 @@ around jitted steps, plus a diagnostic engine with the paper's two modules:
     straggler detection (slow-step attribution), throughput regression.
 
 The ~90% memory reduction claim (Fig. 4) is reproduced in
-benchmarks/bench_xputimer.py by comparing the compressed record layout
-against full-event tracing of the same schedule.
+benchmarks/bench_fig4_xputimer.py by comparing the compressed record
+layout against full-event tracing of the same schedule.
+
+When constructed with a ``telemetry.metrics.MetricsRegistry``, every
+closed span is also published as an ``xputimer_span_ms{span=...}``
+histogram observation (and counters/gauges as
+``xputimer_counter_total{counter=...}`` / ``xputimer_gauge{gauge=...}``),
+so Prometheus scrapes and ``trace_export`` see the same data as
+``diagnose()`` without a second instrumentation pass.  Publishing is
+host-side float math only — the zero-host-sync contract in
+docs/observability.md applies.
 """
 from __future__ import annotations
 
@@ -73,8 +82,11 @@ class XPUTimer:
     """
 
     def __init__(self, traced_apis: Optional[List[str]] = None,
-                 ring_size: int = 65536):
+                 ring_size: int = 65536, registry=None):
         self.traced = set(traced_apis) if traced_apis else None
+        # optional MetricsRegistry mirror (see module docstring)
+        self.registry = registry
+        self._reg_hists: Dict[str, Any] = {}
         self._ids: Dict[str, int] = {}
         self._names: List[str] = []
         self.pool = EventPool()
@@ -113,34 +125,75 @@ class XPUTimer:
             raise
         finally:
             dur_us = (time.perf_counter() - t0) * 1e6
-            sid = self._sid(name)
+            # _sid mutates the span registry and SpanStats.add mutates a
+            # deque + counters: both must sit under the same lock as the
+            # ring write, or spans closing on the Prefetcher/exporter
+            # threads race the engine thread's defaultdict insertion.
             with self._lock:
+                sid = self._sid(name)
                 i = self.head % len(self.ring)
                 self.ring[i] = (sid, int(t0 * 1e6), int(dur_us))
                 self.head += 1
                 if self.head >= len(self.ring):
                     self.wrapped = True
-            self.stats[name].add(dur_us)
-            self.pool.put(ev)
+                self.stats[name].add(dur_us)
+                self.pool.put(ev)
+            self._publish_span(name, dur_us)
+
+    def _publish_span(self, name: str, dur_us: float):
+        if self.registry is None:
+            return
+        h = self._reg_hists.get(name)
+        if h is None:
+            h = self.registry.histogram(
+                "xputimer_span_ms", "XPUTimer span duration", span=name)
+            self._reg_hists[name] = h
+        h.observe(dur_us / 1e3)
 
     def count(self, name: str, n: int = 1):
-        self.counters[name] += n
+        with self._lock:
+            self.counters[name] += n
+        if self.registry is not None:
+            self.registry.counter(
+                "xputimer_counter_total", "XPUTimer counter", counter=name
+            ).inc(n)
 
     def gauge(self, name: str, value: float):
         """Last-value gauge (e.g. commit fraction per metrics drain) —
         updated from the trainer's asynchronous drain, not per step."""
         self.gauges[name] = float(value)
+        if self.registry is not None:
+            self.registry.gauge(
+                "xputimer_gauge", "XPUTimer gauge", gauge=name).set(value)
+
+    # -- ring access (trace_export) -------------------------------------------
+    @property
+    def n_records(self) -> int:
+        """Valid compressed records in the ring (single source of truth
+        for the memory-accounting comparison below)."""
+        return len(self.ring) if self.wrapped else min(self.head,
+                                                       len(self.ring))
+
+    def records(self) -> np.ndarray:
+        """Copy of the valid ring region in chronological order."""
+        with self._lock:
+            if not self.wrapped:
+                return self.ring[: self.head].copy()
+            start = self.head % len(self.ring)
+            return np.concatenate([self.ring[start:], self.ring[:start]])
+
+    def span_names(self) -> List[str]:
+        """sid -> name mapping (index == sid)."""
+        with self._lock:
+            return list(self._names)
 
     # -- memory accounting (Fig. 4 comparison) --------------------------------
     def memory_bytes(self) -> int:
-        n = len(self.ring) if self.wrapped else min(self.head,
-                                                    len(self.ring))
-        return max(n, 1) * self.ring.itemsize + 64 * len(self._names)
+        return max(self.n_records, 1) * self.ring.itemsize \
+            + 64 * len(self._names)
 
     def full_tracing_bytes(self) -> int:
-        n = min(self.head, len(self.ring)) if not self.wrapped \
-            else len(self.ring)
-        return max(n, 1) * FULL_RECORD_BYTES
+        return max(self.n_records, 1) * FULL_RECORD_BYTES
 
     # -- diagnostic engine ------------------------------------------------------
     def diagnose(self, slow_sigma: float = 3.0) -> Dict[str, Any]:

@@ -48,6 +48,7 @@ from repro.core.spikes import SpikeConfig, SpikeDetector
 from repro.data.pipeline import DataPipeline, Prefetcher
 from repro.optim import adamw
 from repro.optim.schedule import AccumWarmup, WSDSchedule
+from repro.telemetry.metrics import MetricsRegistry
 from repro.telemetry.xputimer import XPUTimer
 
 
@@ -76,11 +77,25 @@ class TrainConfig:
 
 class Trainer:
     def __init__(self, runner: api.Runner, pipeline: DataPipeline,
-                 cfg: TrainConfig, timer: Optional[XPUTimer] = None):
+                 cfg: TrainConfig, timer: Optional[XPUTimer] = None,
+                 registry: Optional[MetricsRegistry] = None):
         self.runner = runner
         self.pipeline = pipeline
         self.cfg = cfg
-        self.timer = timer or XPUTimer()
+        # metrics registry (docs/observability.md): XPUTimer publishes
+        # span/counter/gauge mirrors into it, and the drain below feeds
+        # loss/lr gauges — everything from values already on the host
+        # (the drained floats), never an extra device sync
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.timer = timer or XPUTimer(registry=self.registry)
+        if self.timer.registry is None:
+            self.timer.registry = self.registry
+        self._m_loss = self.registry.gauge(
+            "train_loss", "last drained training loss")
+        self._m_lr = self.registry.gauge(
+            "train_lr", "last drained learning rate")
+        self._m_steps = self.registry.counter(
+            "train_steps_total", "optimizer steps drained")
         self.detector = SpikeDetector(cfg.spike)
         self.debug_guards = (contracts.env_debug_guards()
                              if cfg.debug_guards is None
@@ -249,6 +264,10 @@ class Trainer:
                 print(f"[train] step={i} loss={loss:.4f} lr={lr:.2e}"
                       f"{'' if committed else ' SKIP'}", flush=True)
         self.timer.gauge("commit_frac", n_commit / len(host))
+        self._m_steps.inc(len(host))
+        last = self.history[-1]
+        self._m_loss.set(last["loss"])
+        self._m_lr.set(last["lr"])
         self._pending.clear()
 
     # -- checkpointing ---------------------------------------------------------

@@ -1,0 +1,72 @@
+"""FC-TELEMETRY fixtures: host clocks and metrics writes inside
+jit-traced bodies.
+
+Both run ONCE at trace time: the compiled step replays a baked-in
+constant timestamp forever, and the metric object never sees another
+update.  The sanctioned pattern times and records on the host AROUND
+the jitted call (XPUTimer.span / registry writes after the drain).
+"""
+import functools
+import random
+import time
+from time import perf_counter
+
+import jax
+import jax.numpy as jnp
+
+from repro.telemetry import MetricsRegistry
+
+REG = MetricsRegistry()
+HIST = REG.histogram("step_ms", "per-step wall ms")
+TOKENS = REG.counter("tokens_total", "tokens emitted")
+
+
+@jax.jit
+def bad_decorated_step(x):
+    t0 = time.time()  # EXPECT: FC-TELEMETRY
+    return x * t0
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def bad_partial_step(x, n):
+    HIST.observe(float(n))  # EXPECT: FC-TELEMETRY
+    return x + n
+
+
+def bad_wrapped_step(x):
+    dt = perf_counter()  # EXPECT: FC-TELEMETRY
+    TOKENS.inc(1)  # EXPECT: FC-TELEMETRY
+    return x * dt
+
+
+bad_handle = jax.jit(bad_wrapped_step)
+
+
+def make_bad_step(hist):
+    def step(params, batch):
+        hist.observe(1.0)  # EXPECT: FC-TELEMETRY
+        return params
+
+    return step
+
+
+def good_host_loop(step, x, n_steps):
+    """Clocks and metric writes OUTSIDE the traced body: the idiom."""
+    for _ in range(n_steps):
+        t0 = time.perf_counter()
+        x = step(x)
+        HIST.observe((time.perf_counter() - t0) * 1e3)
+        TOKENS.inc(1)
+    return x
+
+
+@jax.jit
+def good_random_sample(key, x):
+    # `.sample` on random/np receivers is NOT a metrics write
+    idx = random.sample(range(4), 2)
+    return x[jnp.asarray(idx)]
+
+
+def good_untraced_helper(x):
+    # never jitted anywhere in this module: host code, clocks are fine
+    return x, time.monotonic()

@@ -19,7 +19,8 @@ from repro.analysis.contracts import compile_guard
 from repro.configs.base import get_smoke_config
 from repro.launch.mesh import make_local_mesh
 from repro.models import model as M
-from repro.serving.online import OnlineConfig, OnlineEngine, OnlineRequest
+from repro.serving.online import (OnlineConfig, OnlineEngine, OnlineRequest,
+                                  run_poisson_load)
 
 
 @pytest.fixture(scope="module")
@@ -327,6 +328,62 @@ def test_radix_same_prefix_racer_dedupes(runner_params):
     eng.alloc.check_invariants()
     eng.alloc.flush_radix()
     assert eng.alloc.n_free == eng.alloc.n_pages - eng.alloc.reserved
+
+
+def test_loadgen_report_fields_pinned(runner_params):
+    """The loadgen report schema is an interface (benchmarks, the serve
+    CLI and CI dashboards key into it): pin the churn-counter fields to
+    exact values on a deterministic burst-arrival run, and pin that the
+    deterministic subset reproduces across identical runs."""
+    runner, params = runner_params
+
+    def load():
+        # rate=1e9 -> the whole arrival schedule spans ~6ns, far below
+        # the loop's own perf_counter overhead, so all 6 requests are
+        # already due at the first clock read and submit in one burst
+        # before any tick: the bounded queue (2) sheds exactly 4
+        eng = OnlineEngine(runner, params,
+                           OnlineConfig(max_slots=2, max_context=32,
+                                        page_size=8, prefill_chunk=4,
+                                        max_queue=2, overload="shed"))
+        return run_poisson_load(eng, rate=1e9, n_requests=6, prompt_len=8,
+                                max_new=4, vocab_size=runner.cfg.vocab_size,
+                                seed=11)
+
+    rep = load()
+    expected_keys = {
+        "rate_req_s", "n_requests", "prompt_len", "max_new", "policy",
+        "radix_cache", "paged_attn", "wall_s", "tokens_out", "tok_s",
+        "ttft_p50_ms", "ttft_p99_ms", "itl_p50_ms", "itl_p99_ms",
+        "ticks", "preemptions", "shed", "budget_skips",
+        "prefill_compiles", "decode_compiles", "draft_compiles",
+        "verify_compiles", "shared_prefix_len", "prefix_hits",
+        "prefix_hit_rate", "prefix_hit_tokens", "cache_evictions",
+        "spec_k", "acceptance_rate", "decode_ticks_per_token",
+        "allocator", "overload", "slo",
+    }
+    assert expected_keys <= set(rep), expected_keys - set(rep)
+
+    assert rep["shed"] == 4                    # 6 arrivals, queue holds 2
+    assert rep["tokens_out"] == 2 * 4          # the 2 admitted complete
+    assert rep["budget_skips"] == 0
+    assert rep["preemptions"] == 0
+    assert rep["prefix_hit_tokens"] == 0       # no shared prefix
+    assert rep["cache_evictions"] == 0
+    assert rep["acceptance_rate"] == 0.0       # spec off: nothing proposed
+    # every post-first token rides exactly one decode tick when spec is off
+    assert rep["decode_ticks_per_token"] == 1.0
+    assert rep["overload"] == "shed"
+    assert rep["slo"] is None                  # populated only under "slo"
+    assert rep["ttft_p99_ms"] > 0 and rep["tok_s"] > 0
+
+    # the wall-clock-free subset is bit-identical across identical runs
+    rep2 = load()
+    pinned = ("n_requests", "tokens_out", "shed", "budget_skips",
+              "preemptions", "prefix_hit_tokens", "cache_evictions",
+              "acceptance_rate", "decode_ticks_per_token", "overload",
+              "slo", "prefill_compiles", "decode_compiles")
+    assert {k: rep[k] for k in pinned} == {k: rep2[k] for k in pinned}
 
 
 def test_online_rejects_unpageable_arch():
